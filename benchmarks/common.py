@@ -1,0 +1,43 @@
+"""Shared benchmark utilities: timing, CSV emission, training cache."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+CACHE_DIR = os.path.join(os.path.dirname(__file__), "_cache")
+RESULTS: list[str] = []
+
+
+def emit(name: str, us_per_call: float, derived):
+    line = f"{name},{us_per_call:.1f},{derived}"
+    RESULTS.append(line)
+    print(line, flush=True)
+
+
+def timed(fn, *args, repeats: int = 1, **kw):
+    t0 = time.time()
+    out = None
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    dt = (time.time() - t0) / repeats
+    return out, dt * 1e6
+
+
+def cache_path(key: str) -> str:
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    return os.path.join(CACHE_DIR, key)
+
+
+def cached_json(key: str, compute):
+    path = cache_path(key + ".json")
+    if os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    val = compute()
+    with open(path, "w") as f:
+        json.dump(val, f, default=float)
+    return val

@@ -1,0 +1,85 @@
+"""Figs. 10-12: GHOST vs GPU / CPU / TPU / prior GNN accelerators.
+
+The paper reports *relative* improvements (its figures are log-scale bars
+without absolute axes we can read), so the platform baselines here are
+DERIVED from the paper's reported average ratios applied to our simulated
+GHOST numbers — documented provenance, not independent measurements:
+
+  GOPS improvements (paper 4.6.1):  GRIP 102.3x, HyGCN 325.3x, EnG 40.5x,
+      HW_ACC 10.2x, ReGNN 12.6x, ReGraphX 150.6x, TPU 1699x, CPU 1567.5x,
+      GPU 584.4x
+  EPB improvements (paper 4.6.2):   GRIP 11.1x, HyGCN 60.5x, EnG 3.8x,
+      HW_ACC 85.9x, ReGNN 15.7x, ReGraphX 313.7x, TPU 24276.7x,
+      CPU 6178.8x, GPU 2585.3x
+
+What IS independently checked here: our GHOST absolute numbers (GOPS in the
+hundreds at ~17 W — consistent with the paper's 18 W power claim and its
+headline ">=10.2x throughput, >=3.8x energy efficiency vs the best prior
+accelerator"), and the per-model ranking structure.
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit
+from repro.gnn import load
+from repro.gnn.datasets import TABLE2
+from repro.photonic.perf import GhostConfig, GnnModelSpec, OrchFlags, simulate
+
+PAPER_GOPS_RATIO = {
+    "GRIP": 102.3, "HyGCN": 325.3, "EnG": 40.5, "HW_ACC": 10.2,
+    "ReGNN": 12.6, "ReGraphX": 150.6, "TPU": 1699.0, "CPU": 1567.5,
+    "GPU": 584.4,
+}
+PAPER_EPB_RATIO = {
+    "GRIP": 11.1, "HyGCN": 60.5, "EnG": 3.8, "HW_ACC": 85.9,
+    "ReGNN": 15.7, "ReGraphX": 313.7, "TPU": 24276.7, "CPU": 6178.8,
+    "GPU": 2585.3,
+}
+
+
+def run(quick: bool = True):
+    cfg = GhostConfig()
+    pairs = ([("gcn", "Cora"), ("gat", "Cora"), ("gin", "Mutag")] if quick
+             else [(m, d) for m in ("gcn", "sage", "gat")
+                   for d in ("Cora", "PubMed", "Citeseer", "Amazon")]
+             + [("gin", d) for d in ("Proteins", "Mutag")])
+    gops_all, epb_all, pw_all = [], [], []
+    for m, d in pairs:
+        t0 = time.time()
+        spec_t = TABLE2[d]
+        graphs = (load(d, seed=0) if spec_t["graphs"] == 1
+                  else load(d, seed=0, num_graphs=min(spec_t["graphs"], 60)))
+        builder = {"gcn": GnnModelSpec.gcn, "sage": GnnModelSpec.graphsage,
+                   "gat": GnnModelSpec.gat, "gin": GnnModelSpec.gin}[m]
+        hidden = 8 if m == "gat" else 64
+        r = simulate(builder(spec_t["features"], hidden, spec_t["labels"]),
+                     graphs, cfg, OrchFlags(), d)
+        dt = (time.time() - t0) * 1e6
+        emit(f"fig10/ghost_gops/{m}/{d}", dt, f"{r.gops:.1f}")
+        emit(f"fig11/ghost_epb/{m}/{d}", 0.0, f"{r.epb * 1e12:.2f}pJ/b")
+        gops_all.append(r.gops)
+        epb_all.append(r.epb)
+        pw_all.append(r.power)
+
+    mean_gops = sum(gops_all) / len(gops_all)
+    mean_epb = sum(epb_all) / len(epb_all)
+    mean_pw = sum(pw_all) / len(pw_all)
+    emit("fig10/ghost_mean_gops", 0.0, f"{mean_gops:.1f}")
+    emit("fig11/ghost_mean_epb", 0.0, f"{mean_epb * 1e12:.2f}pJ/b")
+    emit("power/ghost_mean_watts", 0.0, f"{mean_pw:.1f};paper=18W")
+
+    # Implied platform baselines (paper-ratio-derived; see module docstring).
+    for plat, ratio in PAPER_GOPS_RATIO.items():
+        emit(f"fig10/implied_{plat.lower()}_gops", 0.0,
+             f"{mean_gops / ratio:.3f};paper_ratio={ratio}x")
+    for plat, ratio in PAPER_EPB_RATIO.items():
+        emit(f"fig12/epb_per_gops_vs_{plat.lower()}", 0.0,
+             f"ghost_better_by={PAPER_GOPS_RATIO[plat] * ratio:.3e}x(paper)")
+    # Paper's headline claims
+    emit("headline/min_gops_improvement", 0.0,
+         f"{min(PAPER_GOPS_RATIO.values())}x(>=10.2x)")
+    emit("headline/min_epb_improvement", 0.0,
+         f"{min(PAPER_EPB_RATIO.values())}x(>=3.8x)")
+    return {"gops": mean_gops, "epb": mean_epb, "power": mean_pw}

@@ -1,0 +1,42 @@
+"""Fig. 7a/b + Section 4.2: MR-bank device-level design-space exploration.
+
+Reproduction targets: coherent banks support 20 MRs at 1520 nm; non-coherent
+WDM banks support 18 wavelengths (36 MRs) from 1550 nm at 1 nm spacing;
+required SNR ~= 21.2-21.3 dB for N_levels = 2^7.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.photonic.mrbank import (
+    coherent_surface,
+    noncoherent_surface,
+    selected_design,
+)
+from repro.photonic.noise import MRDesign
+
+
+def run(quick: bool = True):
+    design = MRDesign()
+
+    sel, us = timed(selected_design, design)
+    emit("fig7/selected_design", us,
+         f"coherent={sel['coherent_bank_limit']}MRs@{sel['coherent_wavelength_nm']:.0f}nm;"
+         f"wdm={sel['noncoherent_wdm_limit']}lambda;"
+         f"snr_req={sel['required_snr_db']:.2f}dB")
+
+    surf, us = timed(
+        coherent_surface, np.arange(1500, 1581, 10.0), range(1, 33), design)
+    feas = [p for p in surf if p.feasible]
+    emit("fig7a/coherent_surface", us,
+         f"points={len(surf)};feasible={len(feas)};"
+         f"max_mrs={max((p.num_elements for p in feas), default=0)}")
+
+    surf, us = timed(noncoherent_surface, range(1, 33), design)
+    feas = [p for p in surf if p.feasible]
+    emit("fig7b/noncoherent_surface", us,
+         f"points={len(surf)};max_wavelengths={max((p.num_elements for p in feas), default=0)};"
+         f"max_rings={2 * max((p.num_elements for p in feas), default=0)}")
+    return sel

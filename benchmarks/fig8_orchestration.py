@@ -1,0 +1,71 @@
+"""Fig. 8: orchestration & scheduling optimization sensitivity.
+
+Normalized energy for BP / PP / DAC-sharing / WB combinations vs the
+unoptimized baseline.  Paper-reported averages: BP+PP+DAC => 4.94x lower
+energy, BP+PP+WB => 2.92x.
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import cached_json, emit
+from repro.gnn import load
+from repro.gnn.datasets import TABLE2
+from repro.photonic.perf import GhostConfig, GnnModelSpec, OrchFlags, simulate
+
+COMBOS = {
+    "baseline": OrchFlags(bp=False, pp=False, dac_sharing=False),
+    "BP": OrchFlags(bp=True, pp=False, dac_sharing=False),
+    "PP": OrchFlags(bp=False, pp=True, dac_sharing=False),
+    "BP+PP": OrchFlags(bp=True, pp=True, dac_sharing=False),
+    "BP+DAC": OrchFlags(bp=True, pp=False, dac_sharing=True),
+    "BP+PP+DAC": OrchFlags(bp=True, pp=True, dac_sharing=True),
+    "BP+PP+WB": OrchFlags(bp=True, pp=True, dac_sharing=False, wb=True),
+}
+
+
+def _workloads(quick: bool):
+    if quick:
+        pairs = [("gcn", "Cora"), ("gat", "Cora"), ("gin", "Mutag")]
+    else:
+        pairs = ([(m, d) for m in ("gcn", "sage", "gat")
+                  for d in ("Cora", "PubMed", "Citeseer", "Amazon")]
+                 + [("gin", d) for d in ("Proteins", "Mutag", "BZR",
+                                         "IMDB-binary")])
+    out = []
+    for m, d in pairs:
+        spec = TABLE2[d]
+        graphs = (load(d, seed=0) if spec["graphs"] == 1
+                  else load(d, seed=0, num_graphs=min(spec["graphs"], 60)))
+        builder = {"gcn": GnnModelSpec.gcn, "sage": GnnModelSpec.graphsage,
+                   "gat": GnnModelSpec.gat, "gin": GnnModelSpec.gin}[m]
+        hidden = 8 if m == "gat" else 64
+        out.append((m, d, builder(spec["features"], hidden, spec["labels"]),
+                    graphs))
+    return out
+
+
+def run(quick: bool = True):
+    cfg = GhostConfig()
+    t0 = time.time()
+
+    def compute():
+        rows = {}
+        for m, d, spec, graphs in _workloads(quick):
+            base_e = simulate(spec, graphs, cfg, COMBOS["baseline"], d).energy
+            for combo, flags in COMBOS.items():
+                e = simulate(spec, graphs, cfg, flags, d).energy
+                rows.setdefault(combo, []).append(base_e / e)
+        return {combo: sum(v) / len(v) for combo, v in rows.items()}
+
+    ratios = cached_json("fig8" + ("_quick" if quick else ""), compute)
+    dt = (time.time() - t0) * 1e6
+    for combo, ratio in sorted(ratios.items(), key=lambda kv: -kv[1]):
+        paper = {"BP+PP+DAC": 4.94, "BP+PP+WB": 2.92}.get(combo)
+        tag = f";paper={paper}x" if paper else ""
+        emit(f"fig8/{combo}", dt if combo == "baseline" else 0.0,
+             f"energy_reduction={ratio:.2f}x{tag}")
+    assert ratios["BP+PP+DAC"] == max(ratios.values()), \
+        "BP+PP+DAC must be the best combo (Fig. 8)"
+    return ratios

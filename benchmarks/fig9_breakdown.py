@@ -1,0 +1,46 @@
+"""Fig. 9: per-block (aggregate / combine / update) latency breakdown per
+GNN model and dataset.
+
+Reproduction targets: aggregate consumes the majority for GCN/GraphSAGE on
+the citation graphs; combine (+update/softmax) dominates GAT; combine
+dominates GIN on the small graph-classification graphs.
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import cached_json, emit
+from repro.gnn import load
+from repro.gnn.datasets import TABLE2
+from repro.photonic.perf import GhostConfig, GnnModelSpec, OrchFlags, simulate
+
+
+def run(quick: bool = True):
+    pairs = ([("gcn", "Cora"), ("sage", "Cora"), ("gat", "Cora"),
+              ("gin", "Mutag")] if quick else
+             [(m, d) for m in ("gcn", "sage", "gat")
+              for d in ("Cora", "PubMed", "Citeseer", "Amazon")]
+             + [("gin", d) for d in ("Proteins", "Mutag", "BZR",
+                                     "IMDB-binary")])
+    cfg = GhostConfig()
+    out = {}
+    for m, d in pairs:
+        t0 = time.time()
+        spec_t = TABLE2[d]
+        graphs = (load(d, seed=0) if spec_t["graphs"] == 1
+                  else load(d, seed=0, num_graphs=min(spec_t["graphs"], 60)))
+        builder = {"gcn": GnnModelSpec.gcn, "sage": GnnModelSpec.graphsage,
+                   "gat": GnnModelSpec.gat, "gin": GnnModelSpec.gin}[m]
+        hidden = 8 if m == "gat" else 64
+        r = simulate(builder(spec_t["features"], hidden, spec_t["labels"]),
+                     graphs, cfg, OrchFlags(), d)
+        tot = sum(c.latency for c in r.breakdown.values()) or 1.0
+        fr = {k: r.breakdown[k].latency / tot
+              for k in ("aggregate", "combine", "update")}
+        dt = (time.time() - t0) * 1e6
+        emit(f"fig9/{m}/{d}", dt,
+             f"agg={fr['aggregate']:.2f};comb={fr['combine']:.2f};"
+             f"upd={fr['update']:.2f};lat_us={r.latency * 1e6:.0f}")
+        out[(m, d)] = fr
+    return out

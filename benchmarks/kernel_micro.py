@@ -1,0 +1,44 @@
+"""Kernel microbenchmarks: block_spmm and quant_matmul wall-times on this
+host (interpret mode on CPU; the numbers are correctness-path timings, the
+TPU roofline story lives in EXPERIMENTS.md §Roofline)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.core import Graph, ReduceOp, aggregate_blocked, partition_graph, to_blocked
+from repro.kernels import aggregate_blocked_kernel, quantized_matmul_kernel
+from repro.photonic.quant import quantized_matmul
+
+
+def run(quick: bool = True):
+    rng = np.random.default_rng(0)
+    nv, ne, f = (400, 2000, 128) if quick else (2000, 10000, 512)
+    g = Graph(edge_src=rng.integers(0, nv, ne).astype(np.int32),
+              edge_dst=rng.integers(0, nv, ne).astype(np.int32),
+              node_feat=rng.standard_normal((nv, f)).astype(np.float32)
+              ).validate()
+    pg = partition_graph(g, v=20, n=20)
+    featp = jnp.asarray(pg.pad_features(g.node_feat))
+
+    out, us = timed(lambda: np.asarray(
+        aggregate_blocked_kernel(pg, featp, block_f=128, interpret=True)),
+        repeats=2)
+    emit("kernel/block_spmm_interp", us,
+         f"tiles={pg.stats.nonzero_tiles};skip={pg.stats.skipped_fraction:.2f}")
+
+    bg = to_blocked(pg)
+    out, us = timed(lambda: np.asarray(
+        aggregate_blocked(bg, featp, ReduceOp.SUM)), repeats=3)
+    emit("kernel/block_spmm_jnp_ref", us, "oracle")
+
+    m, k, n = (128, 256, 128) if quick else (512, 1024, 512)
+    x = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32))
+    _, us = timed(lambda: np.asarray(
+        quantized_matmul_kernel(x, w, interpret=True)), repeats=2)
+    emit("kernel/quant_matmul_interp", us, f"{m}x{k}x{n}")
+    _, us = timed(lambda: np.asarray(quantized_matmul(x, w)), repeats=3)
+    emit("kernel/quant_matmul_jnp_ref", us, "oracle")

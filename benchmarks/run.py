@@ -1,0 +1,57 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines (benchmarks.common.emit).
+Default is --quick (CPU-friendly subset per figure); --full covers every
+(model x dataset) cell the paper reports.
+"""
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="all (model x dataset) cells (slow on CPU)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset, e.g. fig8,table3")
+    args = ap.parse_args()
+    quick = not args.full
+
+    from benchmarks import (
+        fig7_device_dse,
+        fig7c_arch_dse,
+        fig8_orchestration,
+        fig9_breakdown,
+        fig10_12_comparison,
+        kernel_micro,
+        table2_datasets,
+        table3_accuracy,
+    )
+
+    suites = {
+        "table2": table2_datasets.run,
+        "table3": table3_accuracy.run,
+        "fig7": fig7_device_dse.run,
+        "fig7c": fig7c_arch_dse.run,
+        "fig8": fig8_orchestration.run,
+        "fig9": fig9_breakdown.run,
+        "fig10_12": fig10_12_comparison.run,
+        "kernels": kernel_micro.run,
+    }
+    selected = (args.only.split(",") if args.only else list(suites))
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for name in selected:
+        try:
+            suites[name](quick=quick)
+        except Exception as e:  # keep the harness running; report the failure
+            print(f"{name}/ERROR,0.0,{type(e).__name__}:{e}", file=sys.stderr)
+            raise
+    print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Table 3: 8-bit vs 32-bit GNN accuracy parity.
+
+Synthetic Table-2 datasets (offline container — DESIGN.md §6); the
+reproduction target is the fp32-vs-int8 accuracy DELTA, which the paper
+reports as <= ~2 points everywhere.
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import cached_json, emit
+from repro.gnn import build_model, load
+from repro.gnn.datasets import TABLE2
+from repro.gnn.train import (
+    eval_graph_classifier,
+    eval_node_classifier,
+    train_graph_classifier,
+    train_node_classifier,
+)
+
+QUICK_COMBOS = [
+    ("gcn", "Cora"), ("sage", "Cora"), ("gat", "Cora"), ("gin", "Mutag"),
+]
+FULL_COMBOS = [
+    (m, d) for m in ("gcn", "sage", "gat")
+    for d in ("Cora", "PubMed", "Citeseer", "Amazon")
+] + [("gin", d) for d in ("Proteins", "Mutag", "BZR", "IMDB-binary")]
+
+
+def run_one(model_name: str, dataset: str, steps: int = 120) -> dict:
+    spec = TABLE2[dataset]
+    if model_name == "gin":
+        graphs = load(dataset, seed=0, num_graphs=min(spec["graphs"], 120))
+        model = build_model("gin", graphs[0].num_features, spec["labels"],
+                            hidden=16, mlp_layers=2)
+        params, test_set = train_graph_classifier(model, graphs, steps=steps)
+        fp32 = eval_graph_classifier(model, params, test_set)
+        int8 = eval_graph_classifier(model, params, test_set, quantized=True)
+    else:
+        graph = load(dataset, seed=0)
+        kw = dict(hidden=8, heads=8) if model_name == "gat" else dict(hidden=64)
+        model = build_model(model_name, spec["features"], spec["labels"], **kw)
+        params, _ = train_node_classifier(model, graph, steps=steps, lr=0.01)
+        fp32 = eval_node_classifier(model, params, graph)
+        int8 = eval_node_classifier(model, params, graph, quantized=True)
+    return {"fp32": fp32, "int8": int8, "delta": fp32 - int8}
+
+
+def run(quick: bool = True):
+    combos = QUICK_COMBOS if quick else FULL_COMBOS
+    worst = 0.0
+    for model_name, dataset in combos:
+        t0 = time.time()
+        r = cached_json(f"table3_{model_name}_{dataset}",
+                        lambda m=model_name, d=dataset: run_one(m, d))
+        dt = (time.time() - t0) * 1e6
+        emit(f"table3/{model_name}/{dataset}", dt,
+             f"fp32={r['fp32']:.3f};int8={r['int8']:.3f};delta={r['delta']:+.3f}")
+        worst = max(worst, abs(r["delta"]))
+    emit("table3/worst_abs_delta", 0.0, f"{worst:.3f}")
+    return worst

@@ -1,0 +1,9 @@
+"""Continuous-batching LM serving demo (any pool arch, reduced size).
+
+Run:  PYTHONPATH=src python examples/lm_serve.py --arch mixtral-8x7b
+"""
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""repro — a JAX reproduction + TPU hardware adaptation of GHOST (Afifi et al., 2023).
+
+GHOST is the first silicon-photonic GNN inference accelerator.  This package
+implements (a) the paper's GReTA-based GNN dataflow, graph partitioning,
+photonic noise/quantization models, and analytic performance simulator, and
+(b) a production-grade multi-pod JAX training/serving framework hosting the
+assigned LM architecture pool, with Pallas TPU kernels for the paper's two
+compute hot-spots (blocked-sparse aggregation and quantized MVM).
+
+Subpackages
+-----------
+core        GReTA programming model, V x N graph partitioning, phase pipeline.
+photonic    Device constants, crosstalk noise models, MR-bank DSE, 8-bit
+            sign-split quantization, analytic perf/energy simulator.
+gnn         GCN / GraphSAGE / GIN / GAT models, synthetic datasets, trainer.
+models      LM architecture zoo (dense / MoE / SSM / hybrid / enc-dec / VLM).
+configs     One config per assigned architecture + the paper's GNN configs.
+data        Deterministic sharded token pipeline.
+optim       AdamW + LR schedules (pure JAX, ZeRO-shardable).
+distributed Sharding rules, collective helpers, elastic re-mesh, grad compression.
+checkpoint  Sharded, async, atomic checkpointing with elastic restore.
+kernels     Pallas TPU kernels (block_spmm, quant_matmul) + jnp oracles.
+launch      Production mesh, multi-pod dry-run, train/serve entry points.
+roofline    Compiled-HLO roofline analysis (compute / memory / collective).
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,17 @@
+from repro.common.utils import (
+    cdiv,
+    round_up,
+    tree_size,
+    tree_bytes,
+    human_bytes,
+    human_number,
+)
+
+__all__ = [
+    "cdiv",
+    "round_up",
+    "tree_size",
+    "tree_bytes",
+    "human_bytes",
+    "human_number",
+]

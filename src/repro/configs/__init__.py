@@ -1,0 +1,41 @@
+"""Architecture config registry: ``get_config(name)`` / ``list_configs()``.
+
+The 10 assigned pool architectures plus the paper's own GNN workloads (GNN
+configs live in repro.gnn; this registry covers the LM zoo consumed by
+``--arch`` on the launchers).
+"""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ModelConfig, reduced_for_smoke
+
+_MODULES = {
+    "whisper-medium": "repro.configs.whisper_medium",
+    "mistral-large-123b": "repro.configs.mistral_large_123b",
+    "stablelm-12b": "repro.configs.stablelm_12b",
+    "command-r-35b": "repro.configs.command_r_35b",
+    "chatglm3-6b": "repro.configs.chatglm3_6b",
+    "chameleon-34b": "repro.configs.chameleon_34b",
+    "hymba-1.5b": "repro.configs.hymba_1p5b",
+    "rwkv6-1.6b": "repro.configs.rwkv6_1p6b",
+    "mixtral-8x7b": "repro.configs.mixtral_8x7b",
+    "deepseek-v3-671b": "repro.configs.deepseek_v3_671b",
+}
+
+ARCH_NAMES = tuple(_MODULES)
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch '{name}'; options: {sorted(_MODULES)}")
+    return importlib.import_module(_MODULES[name]).CONFIG
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    return reduced_for_smoke(get_config(name))
+
+
+def list_configs() -> list[ModelConfig]:
+    return [get_config(n) for n in ARCH_NAMES]

@@ -1,0 +1,169 @@
+"""Config schema for the LM architecture pool.
+
+One frozen dataclass tree describes every architecture; the model zoo
+(`repro.models.model_zoo.build_model`) assembles the computation from it.
+All pool entries live in sibling modules (one file per architecture) with the
+exact numbers from their public sources.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    num_shared_experts: int = 0
+    first_dense_layers: int = 0       # deepseek: leading dense FFN layers
+    dense_d_ff: int = 0               # d_ff of those dense layers
+    capacity_factor: float = 1.25
+    router: str = "softmax"           # softmax (mixtral) | sigmoid (deepseek-v3)
+    aux_loss_weight: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    state_dim: int = 16
+    expand: int = 2                   # d_inner = expand * d_model (mamba)
+    dt_rank: int = 0                  # 0 -> ceil(d_model / 16)
+    conv_width: int = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKVConfig:
+    head_dim: int = 64
+    decay_lora: int = 64              # LoRA rank for data-dependent decay (w)
+    gate_lora: int = 32
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                       # dense | moe | ssm | hybrid | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                 # 0 -> d_model // num_heads
+
+    # --- attention flavor ---
+    rope_theta: float = 10_000.0
+    rope_fraction: float = 1.0        # chatglm 2d-RoPE rotates half the dims
+    sliding_window: int = 0           # 0 = global attention
+    global_layer_indices: Tuple[int, ...] = ()  # hymba: full-attn layers
+    qk_norm: bool = False             # chameleon
+    attn_bias: bool = False
+    logit_softcap: float = 0.0
+
+    # --- block structure ---
+    norm: str = "rmsnorm"             # rmsnorm | layernorm
+    norm_bias: bool = False
+    mlp_bias: bool = False
+    activation: str = "silu"          # silu (SwiGLU) | gelu (plain MLP)
+    glu: bool = True                  # gated MLP (SwiGLU) vs 2-matrix MLP
+    parallel_block: bool = False      # command-r: attn & mlp in parallel
+    tie_embeddings: bool = False
+
+    # --- specialist sub-configs ---
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None   # hymba: parallel attn+mamba heads
+    rwkv: Optional[RWKVConfig] = None # rwkv6: attention-free
+
+    # --- encoder-decoder (whisper) ---
+    encoder_layers: int = 0
+    encoder_frames: int = 1500        # 30 s of audio at 50 Hz post-conv
+    cross_attention: bool = False
+
+    # --- training extras ---
+    mtp: bool = False                 # deepseek multi-token-prediction head
+    mtp_depth: int = 1
+
+    # --- bookkeeping ---
+    source: str = ""                  # provenance tag [source; verified-tier]
+    notes: str = ""
+    dtype: str = "bfloat16"
+    kv_cache_dtype: str = ""          # "" = dtype; "int8" = quantized cache
+    scan_unroll: bool = False         # unroll layer scans (roofline variants)
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def attention_free(self) -> bool:
+        return self.rwkv is not None
+
+    @property
+    def subquadratic(self) -> bool:
+        """True if long-context decode is sub-quadratic in memory/compute —
+        the criterion for running the long_500k shape."""
+        if self.rwkv is not None:
+            return True
+        if self.ssm is not None and self.sliding_window > 0:
+            return True  # hymba: SWA + SSM; global layers are few and noted
+        return False
+
+    def validate(self) -> "ModelConfig":
+        if self.num_heads % max(self.num_kv_heads, 1):
+            raise ValueError(f"{self.name}: heads {self.num_heads} not divisible "
+                             f"by kv heads {self.num_kv_heads}")
+        if self.moe and self.moe.top_k > self.moe.num_experts:
+            raise ValueError(f"{self.name}: top_k > num_experts")
+        return self
+
+    def scaled(self, **overrides) -> "ModelConfig":
+        """A reduced copy for smoke tests (same family/features)."""
+        return dataclasses.replace(self, **overrides)
+
+
+def reduced_for_smoke(cfg: ModelConfig) -> ModelConfig:
+    """Shrink any pool config to CPU-smoke size, preserving its structure."""
+    kw = dict(
+        num_layers=min(cfg.num_layers, 2 if not cfg.global_layer_indices else 3),
+        d_model=128,
+        num_heads=4,
+        num_kv_heads=min(cfg.num_kv_heads, 2) or 1,
+        d_ff=256,
+        vocab_size=512,
+        head_dim=32,
+        dtype="float32",
+        encoder_layers=min(cfg.encoder_layers, 2),
+        encoder_frames=16,
+        sliding_window=min(cfg.sliding_window, 8) if cfg.sliding_window else 0,
+        global_layer_indices=(0,) if cfg.global_layer_indices else (),
+    )
+    if cfg.moe:
+        kw["moe"] = dataclasses.replace(
+            cfg.moe, num_experts=min(cfg.moe.num_experts, 4),
+            top_k=min(cfg.moe.top_k, 2), d_ff_expert=64,
+            first_dense_layers=min(cfg.moe.first_dense_layers, 1),
+            dense_d_ff=min(cfg.moe.dense_d_ff, 256) or 0,
+        )
+    if cfg.mla:
+        kw["mla"] = dataclasses.replace(
+            cfg.mla, q_lora_rank=64, kv_lora_rank=32,
+            qk_nope_head_dim=16, qk_rope_head_dim=8, v_head_dim=16,
+        )
+        kw["head_dim"] = 0
+    if cfg.ssm:
+        kw["ssm"] = dataclasses.replace(cfg.ssm, state_dim=8)
+    if cfg.rwkv:
+        kw["rwkv"] = dataclasses.replace(cfg.rwkv, head_dim=32, decay_lora=16,
+                                         gate_lora=8)
+    return cfg.scaled(**kw)

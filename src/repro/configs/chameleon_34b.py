@@ -1,0 +1,29 @@
+"""chameleon-34b [vlm]: 48L d_model=8192 64H (GQA kv=8) d_ff=22016
+vocab=65536 — early-fusion VQ image tokens, qk-norm.
+[arXiv:2405.09818; unverified]
+
+The VQ-VAE image tokenizer is a STUB: images arrive as token ids inside the
+unified 65536 vocabulary (early fusion), which is exactly how the backbone
+consumes them; input_specs() provides the fused token stream.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="chameleon-34b",
+    family="vlm",
+    num_layers=48,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    d_ff=22016,
+    vocab_size=65536,
+    rope_theta=10_000.0,
+    qk_norm=True,              # chameleon stabilizes with qk layernorm
+    norm="rmsnorm",
+    activation="silu",
+    glu=True,
+    source="[arXiv:2405.09818; unverified]",
+    notes="Modality frontend (VQ image tokenizer) is a STUB: early-fusion "
+          "token ids in the shared vocab.",
+).validate()

@@ -1,0 +1,24 @@
+"""chatglm3-6b [dense]: 28L d_model=4096 32H (GQA kv=2) d_ff=13696
+vocab=65024 — RoPE 2d (rotary on half the head dims), GQA.
+[arXiv:2406.12793; hf]
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="chatglm3-6b",
+    family="dense",
+    num_layers=28,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=2,
+    d_ff=13696,
+    vocab_size=65024,
+    rope_theta=10_000.0,
+    rope_fraction=0.5,         # 2d-RoPE: rotate half of each head's dims
+    norm="rmsnorm",
+    attn_bias=True,            # chatglm uses qkv bias
+    activation="silu",
+    glu=True,
+    source="[arXiv:2406.12793; hf]",
+).validate()

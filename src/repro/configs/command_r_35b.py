@@ -1,0 +1,27 @@
+"""command-r-35b [dense]: 40L d_model=8192 64H (GQA kv=8) d_ff=22528
+vocab=256000 — GQA, no-bias, parallel attn+FFN block.
+[hf:CohereForAI/c4ai-command-r-v01; unverified]
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="command-r-35b",
+    family="dense",
+    num_layers=40,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    d_ff=22528,
+    vocab_size=256000,
+    rope_theta=8_000_000.0,
+    norm="layernorm",
+    norm_bias=False,
+    attn_bias=False,
+    mlp_bias=False,
+    parallel_block=True,       # cohere parallel attention + FFN
+    activation="silu",
+    glu=True,
+    tie_embeddings=True,       # cohere ties input/output embeddings
+    source="[hf:CohereForAI/c4ai-command-r-v01; unverified]",
+).validate()

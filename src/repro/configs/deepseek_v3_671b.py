@@ -1,0 +1,44 @@
+"""deepseek-v3-671b [moe]: 61L d_model=7168 128H (MLA) d_ff=2048 (per routed
+expert) vocab=129280, MoE 1 shared + 256 routed top-8, MTP.
+[arXiv:2412.19437; hf]
+
+MLA per the paper: q_lora_rank=1536, kv_lora_rank=512, qk_nope=128,
+qk_rope=64, v_head=128.  First 3 layers are dense FFN (d_ff=18432).
+Router is sigmoid-scored with top-8 renormalization.  MTP depth 1.
+"""
+
+from repro.configs.base import MLAConfig, ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v3-671b",
+    family="moe",
+    num_layers=61,
+    d_model=7168,
+    num_heads=128,
+    num_kv_heads=128,          # MLA: kv=128 in the pool spec (no GQA cut)
+    d_ff=2048,                 # routed-expert ff dim
+    vocab_size=129280,
+    rope_theta=10_000.0,
+    norm="rmsnorm",
+    activation="silu",
+    glu=True,
+    moe=MoEConfig(
+        num_experts=256,
+        top_k=8,
+        d_ff_expert=2048,
+        num_shared_experts=1,
+        first_dense_layers=3,
+        dense_d_ff=18432,
+        router="sigmoid",
+    ),
+    mla=MLAConfig(
+        q_lora_rank=1536,
+        kv_lora_rank=512,
+        qk_nope_head_dim=128,
+        qk_rope_head_dim=64,
+        v_head_dim=128,
+    ),
+    mtp=True,
+    mtp_depth=1,
+    source="[arXiv:2412.19437; hf]",
+).validate()

@@ -1,0 +1,33 @@
+"""hymba-1.5b [hybrid]: 32L d_model=1600 25H (GQA kv=5) d_ff=5504
+vocab=32001, ssm_state=16 — parallel attn + mamba heads in each layer.
+[arXiv:2411.13676; hf]
+
+Hymba fuses attention heads and SSM (mamba) heads *in parallel* within each
+layer (outputs mean-fused after per-branch normalization).  Most layers use
+sliding-window attention; three layers (first / middle / last) use global
+full attention — which is what keeps long-context decode sub-quadratic.
+"""
+
+from repro.configs.base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="hymba-1.5b",
+    family="hybrid",
+    num_layers=32,
+    d_model=1600,
+    num_heads=25,
+    num_kv_heads=5,
+    head_dim=64,
+    d_ff=5504,
+    vocab_size=32001,
+    rope_theta=10_000.0,
+    sliding_window=1024,
+    global_layer_indices=(0, 15, 31),
+    norm="rmsnorm",
+    activation="silu",
+    glu=True,
+    ssm=SSMConfig(state_dim=16, expand=2, conv_width=4),
+    source="[arXiv:2411.13676; hf]",
+    notes="Meta-token prefix omitted (orthogonal to the backbone shapes); "
+          "parallel attn+SSM fusion per layer implemented faithfully.",
+).validate()

@@ -1,0 +1,28 @@
+"""mixtral-8x7b [moe]: 32L d_model=4096 32H (GQA kv=8) d_ff=14336
+vocab=32000, MoE 8 experts top-2, SWA.  [arXiv:2401.04088; hf]
+"""
+
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="mixtral-8x7b",
+    family="moe",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=14336,                # per-expert ff dim
+    vocab_size=32000,
+    rope_theta=1_000_000.0,
+    sliding_window=4096,
+    norm="rmsnorm",
+    activation="silu",
+    glu=True,
+    moe=MoEConfig(
+        num_experts=8,
+        top_k=2,
+        d_ff_expert=14336,
+        router="softmax",
+    ),
+    source="[arXiv:2401.04088; hf]",
+).validate()

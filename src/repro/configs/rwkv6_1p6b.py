@@ -1,0 +1,24 @@
+"""rwkv6-1.6b [ssm]: 24L d_model=2048 (attention-free) d_ff=7168
+vocab=65536 — Finch: data-dependent decay.  [arXiv:2404.05892; unverified]
+"""
+
+from repro.configs.base import ModelConfig, RWKVConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-1.6b",
+    family="ssm",
+    num_layers=24,
+    d_model=2048,
+    num_heads=32,              # wkv heads = d_model / head_dim
+    num_kv_heads=32,
+    head_dim=64,
+    d_ff=7168,
+    vocab_size=65536,
+    rope_theta=0.0,            # attention-free, no rope
+    norm="layernorm",
+    norm_bias=True,
+    activation="relu",         # rwkv channel-mix uses relu^2
+    glu=False,
+    rwkv=RWKVConfig(head_dim=64, decay_lora=64, gate_lora=32),
+    source="[arXiv:2404.05892; unverified]",
+).validate()

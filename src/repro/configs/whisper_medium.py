@@ -1,0 +1,31 @@
+"""whisper-medium [audio]: enc-dec, conv frontend stubbed.
+
+24L d_model=1024 16H (GQA kv=16 = full MHA) d_ff=4096 vocab=51865.
+[arXiv:2212.04356; unverified]
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-medium",
+    family="audio",
+    num_layers=24,            # decoder layers
+    encoder_layers=24,
+    encoder_frames=1500,      # 30 s audio -> 1500 frames post-conv (stubbed)
+    cross_attention=True,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=4096,
+    vocab_size=51865,
+    rope_theta=0.0,           # whisper uses learned/sinusoidal positions
+    norm="layernorm",
+    norm_bias=True,
+    attn_bias=True,
+    mlp_bias=True,
+    activation="gelu",
+    glu=False,
+    source="[arXiv:2212.04356; unverified]",
+    notes="Modality frontend (2x conv subsampling) is a STUB: input_specs() "
+          "provides precomputed frame embeddings (B, 1500, d_model).",
+).validate()

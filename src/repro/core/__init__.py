@@ -1,0 +1,20 @@
+# The paper's primary contribution: the GReTA-based GHOST dataflow.
+from repro.core.graph import Graph
+from repro.core.partition import PartitionedGraph, PartitionStats, partition_graph
+from repro.core.aggregate import (
+    BlockedGraph,
+    ReduceOp,
+    aggregate_blocked,
+    aggregate_edges,
+    attention_aggregate_blocked,
+    to_blocked,
+)
+from repro.core.greta import ExecutionOrder, GretaSpec, run_layer_blocked, run_layer_edges
+from repro.core.combine import CombineConfig, combine, linear
+from repro.core.update import get_activation, is_optical, soa_transfer
+from repro.core.pipeline import (
+    StageLoad,
+    grouped_latency,
+    pipelined_latency,
+    sequential_latency,
+)

@@ -1,0 +1,191 @@
+"""Aggregate phase — the paper's reduce-unit dataflow, in JAX.
+
+Two numerically-equivalent backends:
+
+* ``aggregate_edges``   — edge-list reference (segment ops).  Used for
+  training and as the oracle in tests.
+* ``aggregate_blocked`` — the GHOST V x N blocked dataflow (Section 3.3.1 +
+  3.4.1): only non-zero adjacency tiles are touched; each tile contributes a
+  dense (V x N) @ (N x F) product — exactly what the coherent-summation MR
+  array computes per mapping, and exactly what the MXU wants.  The Pallas
+  kernel in ``repro.kernels.block_spmm`` implements the same contraction with
+  explicit VMEM tiling; this jnp version is its oracle and the CPU fallback.
+
+Reduce ops: SUM / MEAN / MAX, matching the paper's reduce-unit modes (plain
+coherent summation, the trailing 1/n MR, and the optical comparator).
+"""
+
+from __future__ import annotations
+
+import enum
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.partition import PartitionedGraph
+
+
+class ReduceOp(str, enum.Enum):
+    SUM = "sum"
+    MEAN = "mean"
+    MAX = "max"
+
+
+class BlockedGraph(NamedTuple):
+    """Device-resident view of a PartitionedGraph (static shapes)."""
+
+    blocks: jax.Array      # [B, V, N]
+    block_row: jax.Array   # [B]
+    block_col: jax.Array   # [B]
+    num_dst_groups: int
+    num_src_groups: int
+    v: int
+    n: int
+    num_nodes: int
+
+
+def to_blocked(pg: PartitionedGraph) -> BlockedGraph:
+    return BlockedGraph(
+        blocks=jnp.asarray(pg.blocks),
+        block_row=jnp.asarray(pg.block_row),
+        block_col=jnp.asarray(pg.block_col),
+        num_dst_groups=pg.num_dst_groups,
+        num_src_groups=pg.num_src_groups,
+        v=pg.v,
+        n=pg.n,
+        num_nodes=pg.num_nodes,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Edge-list reference backend.
+# ---------------------------------------------------------------------------
+
+def aggregate_edges(
+    edge_src: jax.Array,
+    edge_dst: jax.Array,
+    feat: jax.Array,
+    num_nodes: int,
+    reduce: ReduceOp = ReduceOp.SUM,
+    edge_weights: jax.Array | None = None,
+) -> jax.Array:
+    """Edge-list aggregation: out[v] = reduce_{(u,v) in E} w_uv * feat[u]."""
+    msgs = feat[edge_src]
+    if edge_weights is not None:
+        msgs = msgs * edge_weights[:, None]
+    if reduce in (ReduceOp.SUM, ReduceOp.MEAN):
+        out = jax.ops.segment_sum(msgs, edge_dst, num_segments=num_nodes)
+        if reduce == ReduceOp.MEAN:
+            deg = jax.ops.segment_sum(
+                jnp.ones_like(edge_dst, feat.dtype), edge_dst, num_segments=num_nodes
+            )
+            out = out / jnp.maximum(deg, 1.0)[:, None]
+        return out
+    if reduce == ReduceOp.MAX:
+        out = jax.ops.segment_max(msgs, edge_dst, num_segments=num_nodes)
+        # Isolated vertices get -inf from segment_max; zero them like the
+        # hardware comparator (no inputs -> no output).
+        return jnp.where(jnp.isfinite(out), out, 0.0)
+    raise ValueError(f"unknown reduce {reduce}")
+
+
+# ---------------------------------------------------------------------------
+# Blocked (GHOST) backend.
+# ---------------------------------------------------------------------------
+
+def aggregate_blocked(
+    bg: BlockedGraph,
+    feat_padded: jax.Array,
+    reduce: ReduceOp = ReduceOp.SUM,
+) -> jax.Array:
+    """Blocked aggregation over non-zero tiles only.
+
+    Args:
+      bg: blocked adjacency (non-zero tiles).
+      feat_padded: [G_src * N, F] source features, padded (see
+        PartitionedGraph.pad_features).
+      reduce: SUM / MEAN / MAX.
+
+    Returns:
+      [G_dst * V, F] aggregated features (padded rows included).
+    """
+    f = feat_padded.shape[-1]
+    src_tiles = feat_padded.reshape(bg.num_src_groups, bg.n, f)[bg.block_col]  # [B,N,F]
+
+    if reduce in (ReduceOp.SUM, ReduceOp.MEAN):
+        partial = jnp.einsum(
+            "bvn,bnf->bvf", bg.blocks, src_tiles.astype(bg.blocks.dtype)
+        )
+        out = jax.ops.segment_sum(partial, bg.block_row, num_segments=bg.num_dst_groups)
+        out = out.reshape(bg.num_dst_groups * bg.v, f)
+        if reduce == ReduceOp.MEAN:
+            # Degree = sum of tile entries: multiplicities of duplicate edges
+            # were accumulated into the tile values at partition time, so this
+            # matches the edge-list backend's per-edge count exactly.
+            deg_partial = bg.blocks.sum(axis=2).astype(out.dtype)  # [B,V]
+            deg = jax.ops.segment_sum(deg_partial, bg.block_row, num_segments=bg.num_dst_groups)
+            deg = deg.reshape(bg.num_dst_groups * bg.v)
+            out = out / jnp.maximum(deg, 1.0)[:, None]
+        return out.astype(feat_padded.dtype)
+
+    if reduce == ReduceOp.MAX:
+        mask = (bg.blocks != 0)[..., None]                          # [B,V,N,1]
+        neg = jnp.asarray(-jnp.inf, feat_padded.dtype)
+        cand = jnp.where(mask, src_tiles[:, None, :, :], neg)       # [B,V,N,F]
+        partial = cand.max(axis=2)                                  # [B,V,F]
+        out = jax.ops.segment_max(partial, bg.block_row, num_segments=bg.num_dst_groups)
+        out = out.reshape(bg.num_dst_groups * bg.v, f)
+        return jnp.where(jnp.isfinite(out), out, 0.0)
+
+    raise ValueError(f"unknown reduce {reduce}")
+
+
+def attention_aggregate_blocked(
+    bg: BlockedGraph,
+    values_padded: jax.Array,   # [G_src*N, H, F]  (already W-transformed, per head)
+    src_scores: jax.Array,      # [G_src*N, H]     a_src . (W h_u)
+    dst_scores: jax.Array,      # [G_dst*V, H]     a_dst . (W h_v)
+    negative_slope: float = 0.2,
+) -> jax.Array:
+    """GAT-style masked-softmax aggregation on the blocked adjacency.
+
+    Computes, per head h:  out[v] = sum_u softmax_u(leaky_relu(e_uv)) val[u]
+    with e_uv = dst_scores[v] + src_scores[u], masked to edges, using a
+    numerically-stable two-pass (segment-max then segment-sum) over tiles —
+    the blocked analogue of GHOST's GAT pipeline (Section 3.4.2, Fig. 6b).
+
+    Returns [G_dst*V, H, F].
+    """
+    heads = values_padded.shape[1]
+    f = values_padded.shape[2]
+    mask = bg.blocks != 0                                              # [B,V,N]
+
+    s_src = src_scores.reshape(bg.num_src_groups, bg.n, heads)[bg.block_col]   # [B,N,H]
+    s_dst = dst_scores.reshape(bg.num_dst_groups, bg.v, heads)[bg.block_row]   # [B,V,H]
+    logits = s_dst[:, :, None, :] + s_src[:, None, :, :]               # [B,V,N,H]
+    logits = jax.nn.leaky_relu(logits, negative_slope)
+    neg = jnp.asarray(-1e30, logits.dtype)
+    logits = jnp.where(mask[..., None], logits, neg)
+
+    # Pass 1: per-destination-row running max across tiles.
+    tile_max = logits.max(axis=2)                                      # [B,V,H]
+    row_max = jax.ops.segment_max(tile_max, bg.block_row, num_segments=bg.num_dst_groups)
+    row_max = jnp.maximum(row_max, -1e30)                              # isolated rows
+    m = row_max[bg.block_row][:, :, None, :]                           # [B,V,1,H]
+
+    # Pass 2: exp-sum and weighted value sum.  Tile values carry edge
+    # multiplicity (duplicate edges accumulate at partition time), so p is
+    # scaled by them — matching the edge-list softmax on multigraphs.
+    mult = bg.blocks[..., None]                                        # [B,V,N,1]
+    p = jnp.where(mask[..., None], mult * jnp.exp(logits - m), 0.0)    # [B,V,N,H]
+    denom_partial = p.sum(axis=2)                                      # [B,V,H]
+    denom = jax.ops.segment_sum(denom_partial, bg.block_row, num_segments=bg.num_dst_groups)
+
+    vals = values_padded.reshape(bg.num_src_groups, bg.n, heads, f)[bg.block_col]  # [B,N,H,F]
+    num_partial = jnp.einsum("bvnh,bnhf->bvhf", p, vals)               # [B,V,H,F]
+    num = jax.ops.segment_sum(num_partial, bg.block_row, num_segments=bg.num_dst_groups)
+
+    out = num / jnp.maximum(denom, 1e-30)[..., None]
+    return out.reshape(bg.num_dst_groups * bg.v, heads, f)

@@ -1,0 +1,55 @@
+"""Combine block — the transform-unit linear map (paper Section 3.3.2).
+
+The photonic combine block is an MR-bank-array MVM with optional optical
+batch-norm and balanced-photodetector accumulation of sign-split values.  On
+TPU the same stage is either a bf16/f32 matmul (training) or the int8
+sign-split quantized matmul (serving fast path; see
+``repro.photonic.quant`` + ``repro.kernels.quant_matmul``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.photonic.quant import QuantConfig, quantized_matmul
+
+
+@dataclasses.dataclass(frozen=True)
+class CombineConfig:
+    quantized: bool = False           # use the photonic 8-bit sign-split path
+    quant: QuantConfig = dataclasses.field(default_factory=QuantConfig)
+    batch_norm: bool = False          # optical BN via broadband MRs
+
+
+def linear(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None) -> jax.Array:
+    y = x @ w
+    if b is not None:
+        y = y + b
+    return y
+
+
+def combine(
+    h_agg: jax.Array,
+    params: dict,
+    cfg: CombineConfig = CombineConfig(),
+) -> jax.Array:
+    """Apply the combine-block transform: y = h_agg @ W (+ b) (+ BN).
+
+    params: {"w": [F_in, F_out], optional "b": [F_out],
+             optional "bn_scale"/"bn_bias": [F_out]}
+    """
+    w = params["w"]
+    if cfg.quantized:
+        y = quantized_matmul(h_agg, w, cfg.quant)
+    else:
+        y = h_agg @ w
+    if "b" in params and params["b"] is not None:
+        y = y + params["b"]
+    if cfg.batch_norm and "bn_scale" in params:
+        # Inference-time BN folded to scale/bias (the broadband-MR tuning).
+        y = y * params["bn_scale"] + params["bn_bias"]
+    return y

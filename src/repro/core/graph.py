@@ -1,0 +1,107 @@
+"""Graph container used throughout the GNN half of the framework.
+
+A deliberately simple, numpy-backed structure: GHOST's preprocessing
+(partitioning, fetch-order generation) is an *offline* step in the paper
+(Section 3.4.1), so it runs in numpy; only the per-layer compute runs in JAX.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Graph:
+    """A single graph.
+
+    Attributes:
+      edge_src: [E] int32 source (input) vertex of each edge.
+      edge_dst: [E] int32 destination (output) vertex of each edge.
+      node_feat: [Nv, F] float32 vertex feature matrix.
+      edge_feat: optional [E, Fe] float32 edge features.
+      labels: optional [Nv] int32 node labels (node classification) or
+        scalar graph label (graph classification).
+      train_mask / val_mask / test_mask: optional [Nv] bool masks.
+      graph_label: optional int for graph-classification datasets.
+    """
+
+    edge_src: np.ndarray
+    edge_dst: np.ndarray
+    node_feat: np.ndarray
+    edge_feat: Optional[np.ndarray] = None
+    labels: Optional[np.ndarray] = None
+    train_mask: Optional[np.ndarray] = None
+    val_mask: Optional[np.ndarray] = None
+    test_mask: Optional[np.ndarray] = None
+    graph_label: Optional[int] = None
+    name: str = "graph"
+
+    @property
+    def num_nodes(self) -> int:
+        return int(self.node_feat.shape[0])
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.edge_src.shape[0])
+
+    @property
+    def num_features(self) -> int:
+        return int(self.node_feat.shape[1])
+
+    def validate(self) -> "Graph":
+        if self.edge_src.shape != self.edge_dst.shape:
+            raise ValueError("edge_src/edge_dst shape mismatch")
+        if self.num_edges and (
+            self.edge_src.max() >= self.num_nodes or self.edge_dst.max() >= self.num_nodes
+        ):
+            raise ValueError("edge endpoint out of range")
+        if self.edge_src.dtype != np.int32:
+            self.edge_src = self.edge_src.astype(np.int32)
+            self.edge_dst = self.edge_dst.astype(np.int32)
+        return self
+
+    def with_self_loops(self) -> "Graph":
+        """Return a copy with self loops added for every vertex (dedup'd).
+
+        GCN-style aggregation includes the vertex itself (h_v in the paper's
+        reduce output h_v + sum_u h_u).
+        """
+        loops = np.arange(self.num_nodes, dtype=np.int32)
+        have = set(zip(self.edge_src.tolist(), self.edge_dst.tolist()))
+        keep = np.array([i for i in loops if (i, i) not in have], dtype=np.int32)
+        return dataclasses.replace(
+            self,
+            edge_src=np.concatenate([self.edge_src, keep]),
+            edge_dst=np.concatenate([self.edge_dst, keep]),
+            edge_feat=None if self.edge_feat is None else np.concatenate(
+                [self.edge_feat, np.zeros((len(keep), self.edge_feat.shape[1]), self.edge_feat.dtype)]
+            ),
+        )
+
+    def in_degrees(self) -> np.ndarray:
+        deg = np.zeros(self.num_nodes, dtype=np.int64)
+        np.add.at(deg, self.edge_dst, 1)
+        return deg
+
+    def out_degrees(self) -> np.ndarray:
+        deg = np.zeros(self.num_nodes, dtype=np.int64)
+        np.add.at(deg, self.edge_src, 1)
+        return deg
+
+    def dense_adjacency(self) -> np.ndarray:
+        """[Nv, Nv] dense 0/1 adjacency, A[dst, src] = 1.  Small graphs only."""
+        a = np.zeros((self.num_nodes, self.num_nodes), dtype=np.float32)
+        a[self.edge_dst, self.edge_src] = 1.0
+        return a
+
+    def gcn_edge_weights(self) -> np.ndarray:
+        """Symmetric-normalized GCN weights per edge: 1/sqrt(d_dst * d_src).
+
+        Assumes self-loops have already been added (Kipf & Welling renorm trick).
+        """
+        deg = self.in_degrees().astype(np.float64)
+        w = 1.0 / np.sqrt(np.maximum(deg[self.edge_dst], 1) * np.maximum(deg[self.edge_src], 1))
+        return w.astype(np.float32)

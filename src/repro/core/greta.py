@@ -1,0 +1,109 @@
+"""GReTA programming model (paper Section 3.5, Algorithm 1).
+
+Four stateless UDFs decompose every GNN layer:
+
+  Gather    — builds a per-edge message from (h_u, h_v, h_uv).  All GNNs the
+              paper targets use messages of the form  w_uv * pre(h_u)  with a
+              scalar edge weight (1, GCN norm, or a GAT attention coeff) and a
+              node-wise pre-map; this is the structure the photonic hardware
+              (and the MXU) exploits, so the engine takes (pre, edge policy)
+              rather than an arbitrary per-edge closure.
+  Reduce    — SUM / MEAN / MAX over the messages of each output vertex.
+  Transform — linear map with the shared weights (the combine block).
+  Activate  — non-linear update (the update block).
+
+Two execution orders (Section 3.4.2):
+  aggregate_first  (GCN / GraphSAGE / GIN):  reduce -> transform -> activate
+  transform_first  (GAT):                    transform -> attention-reduce -> activate
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aggregate import (
+    BlockedGraph,
+    ReduceOp,
+    aggregate_blocked,
+    aggregate_edges,
+)
+
+
+class ExecutionOrder(str, enum.Enum):
+    AGGREGATE_FIRST = "aggregate_first"
+    TRANSFORM_FIRST = "transform_first"
+
+
+@dataclasses.dataclass(frozen=True)
+class GretaSpec:
+    """A GNN layer expressed as GReTA UDFs.
+
+    Attributes:
+      pre: node-wise map applied to source features before aggregation
+        (identity for GCN/SAGE/GIN sum path).
+      reduce: the reduce-unit operation.
+      transform: (h_agg, h_self, params) -> transformed features.  The
+        combine-block linear map; receives the vertex's own (pre-aggregation)
+        features for models that treat self separately (GraphSAGE concat, GIN
+        (1+eps) center weighting).
+      activate: update-block nonlinearity.
+      order: aggregate_first or transform_first.
+      self_loops: whether aggregation includes the vertex itself (GCN-style);
+        graphs are expected to carry self-loop edges when True.
+    """
+
+    pre: Callable[[jax.Array], jax.Array]
+    reduce: ReduceOp
+    transform: Callable[[jax.Array, jax.Array, dict], jax.Array]
+    activate: Callable[[jax.Array], jax.Array]
+    order: ExecutionOrder = ExecutionOrder.AGGREGATE_FIRST
+    self_loops: bool = True
+
+
+def run_layer_edges(
+    spec: GretaSpec,
+    params: dict,
+    feat: jax.Array,
+    edge_src: jax.Array,
+    edge_dst: jax.Array,
+    num_nodes: int,
+    edge_weights: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Execute one GReTA layer with the edge-list backend (training path)."""
+    if spec.order != ExecutionOrder.AGGREGATE_FIRST:
+        raise ValueError(
+            "transform_first layers (GAT) have model-specific attention; "
+            "use the model implementation in repro.gnn.layers"
+        )
+    msgs_src = spec.pre(feat)
+    h_agg = aggregate_edges(
+        edge_src, edge_dst, msgs_src, num_nodes, spec.reduce, edge_weights
+    )
+    h = spec.transform(h_agg, feat, params)
+    return spec.activate(h)
+
+
+def run_layer_blocked(
+    spec: GretaSpec,
+    params: dict,
+    feat_padded: jax.Array,
+    bg: BlockedGraph,
+) -> jax.Array:
+    """Execute one GReTA layer with the GHOST blocked backend (serving path).
+
+    ``feat_padded`` is [G_src * N, F]; the return is [G_dst * V, F_out] with
+    padded rows present (slice with bg.num_nodes at the boundary).
+    """
+    if spec.order != ExecutionOrder.AGGREGATE_FIRST:
+        raise ValueError(
+            "transform_first layers (GAT) are executed by repro.gnn.layers"
+        )
+    msgs_src = spec.pre(feat_padded)
+    h_agg = aggregate_blocked(bg, msgs_src, spec.reduce)
+    h = spec.transform(h_agg, feat_padded, params)
+    return spec.activate(h)

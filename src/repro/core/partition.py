@@ -1,0 +1,201 @@
+"""GHOST graph buffering & partitioning (paper Section 3.4.1).
+
+The paper's key dataflow optimization: the adjacency matrix is blocked into
+V x N tiles — V output (destination) vertices per execution-lane group and N
+input (source) vertices per edge-control-unit group.  Tiles that contain no
+edge ("all-zero blocks") are *skipped entirely*: they are never fetched and
+never scheduled.  The partition matrix and fetch order are generated once,
+offline.
+
+On TPU this becomes a block-CSR sparse format.  The JAX-visible arrays are
+padded/static so the downstream compute (jnp reference in
+``repro.core.aggregate`` and the Pallas kernel in
+``repro.kernels.block_spmm``) is shape-stable:
+
+  blocks      [B, V, N]   dense tile values (edge weights; 0 = no edge)
+  block_row   [B]         destination-group index of each tile
+  block_col   [B]         source-group index of each tile
+  row_ptr     [G_dst+1]   CSR row pointers over tiles (tiles sorted by row)
+
+where B is the number of *non-zero* tiles only.  ``PartitionStats`` carries
+the occupancy numbers the analytic performance model (photonic/perf.py)
+consumes — they determine aggregate-phase latency and skipped-fetch savings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.common.utils import cdiv
+from repro.core.graph import Graph
+
+
+@dataclasses.dataclass
+class PartitionStats:
+    """Occupancy statistics consumed by the analytic perf model."""
+
+    num_nodes: int
+    num_edges: int
+    v: int  # output-group size (execution lanes)
+    n: int  # input-group size (edge-control units)
+    num_dst_groups: int
+    num_src_groups: int
+    total_tiles: int  # num_dst_groups * num_src_groups
+    nonzero_tiles: int
+    skipped_fraction: float  # fraction of tiles skipped (all-zero)
+    max_tiles_per_row: int
+    mean_tiles_per_row: float
+    max_neighbors: int  # max in-degree (drives lane latency)
+    mean_neighbors: float
+    tile_density: float  # mean nnz fraction inside non-zero tiles
+
+
+@dataclasses.dataclass
+class PartitionedGraph:
+    """Block-CSR adjacency + per-node data, ready for blocked aggregation.
+
+    All arrays are numpy; convert to jnp at the call site.  Node features are
+    padded to a multiple of the group sizes so tile loads are static-shape.
+    """
+
+    blocks: np.ndarray      # [B, V, N] float32 tile values
+    block_row: np.ndarray   # [B] int32
+    block_col: np.ndarray   # [B] int32
+    row_ptr: np.ndarray     # [G_dst + 1] int32
+    v: int
+    n: int
+    num_nodes: int          # true (unpadded) node count
+    num_dst_groups: int
+    num_src_groups: int
+    stats: PartitionStats
+
+    @property
+    def padded_dst(self) -> int:
+        return self.num_dst_groups * self.v
+
+    @property
+    def padded_src(self) -> int:
+        return self.num_src_groups * self.n
+
+    def pad_features(self, feat: np.ndarray) -> np.ndarray:
+        """Pad [Nv, F] node features to [padded_src, F] for source-side loads."""
+        pad = self.padded_src - feat.shape[0]
+        if pad < 0:
+            raise ValueError("feature matrix larger than padded node count")
+        if pad == 0:
+            return feat
+        return np.concatenate([feat, np.zeros((pad, feat.shape[1]), feat.dtype)], axis=0)
+
+    def reconstruct_dense(self) -> np.ndarray:
+        """Rebuild the [padded_dst, padded_src] dense adjacency (for tests)."""
+        a = np.zeros((self.padded_dst, self.padded_src), dtype=np.float32)
+        for b in range(self.blocks.shape[0]):
+            r, c = int(self.block_row[b]), int(self.block_col[b])
+            a[r * self.v:(r + 1) * self.v, c * self.n:(c + 1) * self.n] = self.blocks[b]
+        return a
+
+
+def partition_graph(
+    graph: Graph,
+    v: int,
+    n: int,
+    edge_weights: Optional[np.ndarray] = None,
+    sort_rows: bool = True,
+) -> PartitionedGraph:
+    """Build the GHOST V x N partition matrix for ``graph``.
+
+    Args:
+      graph: input graph (A[dst, src] convention).
+      v: output-vertex group size (number of execution lanes, paper's V).
+      n: input-vertex group size (number of edge-control units, paper's N).
+      edge_weights: optional [E] per-edge values (e.g. GCN normalization);
+        defaults to 1.0 (plain adjacency).
+      sort_rows: keep tiles in CSR row order (the paper's offline fetch-order
+        generation).
+
+    Returns:
+      PartitionedGraph with only the non-zero tiles materialized.
+    """
+    if v <= 0 or n <= 0:
+        raise ValueError(f"group sizes must be positive, got v={v} n={n}")
+    nv = graph.num_nodes
+    g_dst = max(1, cdiv(nv, v))
+    g_src = max(1, cdiv(nv, n))
+
+    w = edge_weights if edge_weights is not None else np.ones(graph.num_edges, np.float32)
+    if w.shape[0] != graph.num_edges:
+        raise ValueError("edge_weights length mismatch")
+
+    # Tile id of each edge.
+    tr = graph.edge_dst // v
+    tc = graph.edge_src // n
+    tile_id = tr.astype(np.int64) * g_src + tc.astype(np.int64)
+
+    # Unique non-zero tiles, in (row, col) order — this IS the offline fetch order.
+    uniq, inverse = np.unique(tile_id, return_inverse=True)
+    num_blocks = len(uniq)
+    block_row = (uniq // g_src).astype(np.int32)
+    block_col = (uniq % g_src).astype(np.int32)
+
+    blocks = np.zeros((max(num_blocks, 1), v, n), dtype=np.float32)
+    if graph.num_edges:
+        lr = (graph.edge_dst % v).astype(np.int64)
+        lc = (graph.edge_src % n).astype(np.int64)
+        # Accumulate (duplicate edges sum, matching segment-sum semantics).
+        np.add.at(blocks, (inverse, lr, lc), w.astype(np.float32))
+
+    # CSR row pointers over tiles (uniq is already row-major sorted).
+    row_ptr = np.zeros(g_dst + 1, dtype=np.int32)
+    np.add.at(row_ptr, block_row + 1, 1)
+    row_ptr = np.cumsum(row_ptr).astype(np.int32)
+
+    tiles_per_row = np.diff(row_ptr)
+    deg = graph.in_degrees()
+    nnz_inside = (
+        float((blocks != 0).sum()) / (num_blocks * v * n) if num_blocks else 0.0
+    )
+    stats = PartitionStats(
+        num_nodes=nv,
+        num_edges=graph.num_edges,
+        v=v,
+        n=n,
+        num_dst_groups=g_dst,
+        num_src_groups=g_src,
+        total_tiles=g_dst * g_src,
+        nonzero_tiles=num_blocks,
+        skipped_fraction=1.0 - (num_blocks / (g_dst * g_src)),
+        max_tiles_per_row=int(tiles_per_row.max()) if len(tiles_per_row) else 0,
+        mean_tiles_per_row=float(tiles_per_row.mean()) if len(tiles_per_row) else 0.0,
+        max_neighbors=int(deg.max()) if nv else 0,
+        mean_neighbors=float(deg.mean()) if nv else 0.0,
+        tile_density=nnz_inside,
+    )
+    if not sort_rows:
+        # Degree-descending schedule (workload-balancing experiments).
+        order = np.argsort(-tiles_per_row[block_row], kind="stable")
+        blocks, block_row, block_col = blocks[order], block_row[order], block_col[order]
+
+    return PartitionedGraph(
+        blocks=blocks,
+        block_row=block_row,
+        block_col=block_col,
+        row_ptr=row_ptr,
+        v=v,
+        n=n,
+        num_nodes=nv,
+        num_dst_groups=g_dst,
+        num_src_groups=g_src,
+        stats=stats,
+    )
+
+
+def partition_cost_table(graph: Graph, v_values, n_values) -> list[PartitionStats]:
+    """Sweep (V, N) and return occupancy stats for the architecture DSE."""
+    out = []
+    for v in v_values:
+        for n in n_values:
+            out.append(partition_graph(graph, v, n).stats)
+    return out

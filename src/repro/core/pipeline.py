@@ -1,0 +1,91 @@
+"""Execution pipelining & scheduling model (paper Section 3.4.2, Fig. 6).
+
+GHOST pipelines at two granularities:
+
+  level 1 — within one output-vertex group V_i: reduce / transform / update
+            units start as soon as their first input tile (R_c neighbors,
+            R_r or T_r values) is ready rather than waiting for the whole
+            upstream phase.
+  level 2 — across output-vertex groups: group V_{i+1}'s first reduce starts
+            right after group V_i's last reduce (the reduce units free up),
+            overlapping with V_i's transform/update tail.
+
+The model is an analytic flow-shop schedule (matching the paper's simulator
+granularity, not a discrete-event simulation).  Each stage s is a dedicated
+unit that processes groups in order.  Let C[s] be the time stage s becomes
+free.  For group i with per-stage loads t[i, s] (tiles x tile_time):
+
+  no pipelining      start_s = max(C[s], finish_{s-1});  finish_s = start_s + t
+  tile pipelining    start_s = max(C[s], start_{s-1} + tile_{s-1})
+                     finish_s = max(start_s + t, finish_{s-1} + tile_s)
+
+i.e. a stage may begin one producer-tile after its upstream stage begins, and
+cannot finish earlier than one tile after its upstream finishes — the classic
+pipelined-dataflow bound.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class StageLoad:
+    """One pipeline stage for one group: ``tiles`` items, ``tile_time`` s each."""
+
+    name: str
+    tiles: int
+    tile_time: float
+
+    @property
+    def total(self) -> float:
+        return self.tiles * self.tile_time
+
+
+def sequential_latency(stages: Sequence[StageLoad]) -> float:
+    """No pipelining: phases execute back-to-back (the Fig. 8 baseline)."""
+    return sum(s.total for s in stages)
+
+
+def pipelined_latency(stages: Sequence[StageLoad]) -> float:
+    """Level-1 (within-group) pipelining only, single group."""
+    return grouped_latency([list(stages)], pipeline_within=True,
+                           pipeline_across=False)
+
+
+def grouped_latency(
+    per_group_stages: Sequence[Sequence[StageLoad]],
+    pipeline_within: bool = True,
+    pipeline_across: bool = True,
+) -> float:
+    """Makespan over all output-vertex groups (levels 1 + 2).
+
+    ``pipeline_across=False`` serializes groups (each group must fully drain
+    before the next starts); ``pipeline_within=False`` serializes stages
+    inside a group.  Both off reproduces the paper's no-PP baseline.
+    """
+    if not per_group_stages:
+        return 0.0
+    num_stages = max(len(g) for g in per_group_stages)
+    free = [0.0] * num_stages          # when each stage unit becomes free
+    group_done = 0.0
+    for stages in per_group_stages:
+        starts = [0.0] * len(stages)
+        finishes = [0.0] * len(stages)
+        barrier = 0.0 if pipeline_across else group_done
+        for s, st in enumerate(stages):
+            if s == 0:
+                start = max(free[s], barrier)
+                finish = start + st.total
+            elif pipeline_within:
+                start = max(free[s], starts[s - 1] + stages[s - 1].tile_time,
+                            barrier)
+                finish = max(start + st.total, finishes[s - 1] + st.tile_time)
+            else:
+                start = max(free[s], finishes[s - 1], barrier)
+                finish = start + st.total
+            starts[s], finishes[s] = start, finish
+            free[s] = finish
+        group_done = finishes[-1] if finishes else group_done
+    return max(free)

@@ -1,0 +1,53 @@
+"""Update block — non-linear activation units (paper Section 3.3.3).
+
+SOA-implementable activations (relu / sigmoid / tanh / leaky_relu) run in the
+optical domain in GHOST; softmax falls back to the digital LUT unit of [37]
+(294 MHz).  Functionally these are the exact nonlinearities; the *cost*
+difference (optical vs digital) lives in the analytic perf model.
+
+``soa_transfer`` models the SOA gain curve used by the noise-faithful
+inference mode: a saturating amplifier whose gain ~1 regime approximates ReLU
+(per [36]); it lets tests quantify the activation-approximation error the
+paper implicitly accepts.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Activations GHOST computes optically (SOA-based, [36]).
+OPTICAL_ACTIVATIONS = ("relu", "leaky_relu", "sigmoid", "tanh", "identity")
+# Activations GHOST computes in the digital LUT unit ([37]).
+DIGITAL_ACTIVATIONS = ("softmax", "elu", "gelu")
+
+
+def get_activation(name: str):
+    table = {
+        "relu": jax.nn.relu,
+        "leaky_relu": lambda x: jax.nn.leaky_relu(x, 0.2),
+        "sigmoid": jax.nn.sigmoid,
+        "tanh": jnp.tanh,
+        "identity": lambda x: x,
+        "elu": jax.nn.elu,
+        "gelu": jax.nn.gelu,
+        "softmax": lambda x: jax.nn.softmax(x, axis=-1),
+    }
+    if name not in table:
+        raise ValueError(f"unknown activation '{name}'")
+    return table[name]
+
+
+def is_optical(name: str) -> bool:
+    return name in OPTICAL_ACTIVATIONS
+
+
+def soa_transfer(x: jax.Array, gain: float = 1.0, p_sat: float = 4.0) -> jax.Array:
+    """Saturating SOA transfer curve: g(x) = gain * x / (1 + |x| / p_sat), x>=0.
+
+    Negative optical powers don't exist; the balanced-photodetector front-end
+    clips at zero, so the composite behaves like a soft ReLU whose linear
+    regime (|x| << p_sat, gain ~ 1) matches ReLU (per [36]).
+    """
+    pos = jnp.maximum(x, 0.0)
+    return gain * pos / (1.0 + pos / p_sat)

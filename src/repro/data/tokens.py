@@ -1,0 +1,64 @@
+"""Deterministic synthetic LM token pipeline (sharded, resumable).
+
+Offline container => no real corpora.  The stream is a seeded order-2
+Markov chain over the vocabulary (so models have actual structure to learn,
+unlike uniform noise), generated host-side in numpy.  Determinism contract:
+batch(step) depends only on (seed, step, global_batch, seq_len) — restarts
+resume exactly, and any host can regenerate any shard (no data-server
+state), which is what makes checkpoint-restart and elastic rescaling exact.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class TokenPipeline:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    step: int = 0             # resumable cursor (checkpointed)
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        # Sparse-ish Markov structure: each state prefers a few successors.
+        self._fanout = 32
+        self._succ = rng.integers(
+            0, self.vocab_size, size=(min(self.vocab_size, 4096), self._fanout)
+        ).astype(np.int32)
+
+    def state_dict(self) -> dict:
+        return {"seed": self.seed, "step": self.step}
+
+    def load_state_dict(self, d: dict):
+        assert d["seed"] == self.seed, "pipeline seed mismatch on restore"
+        self.step = int(d["step"])
+
+    def _gen(self, step: int) -> np.ndarray:
+        rng = np.random.default_rng((self.seed, step))
+        b, s = self.global_batch, self.seq_len
+        toks = np.empty((b, s + 1), np.int32)
+        toks[:, 0] = rng.integers(0, self.vocab_size, b)
+        states = toks[:, 0] % self._succ.shape[0]
+        for t in range(1, s + 1):
+            choice = rng.integers(0, self._fanout, b)
+            nxt = self._succ[states, choice]
+            # occasional jumps keep the chain aperiodic
+            jump = rng.random(b) < 0.05
+            nxt = np.where(jump, rng.integers(0, self.vocab_size, b), nxt)
+            toks[:, t] = nxt
+            states = nxt % self._succ.shape[0]
+        return toks
+
+    def next_batch(self) -> dict:
+        toks = self._gen(self.step)
+        self.step += 1
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+    def batch_at(self, step: int) -> dict:
+        toks = self._gen(step)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}

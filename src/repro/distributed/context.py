@@ -1,0 +1,146 @@
+"""Mesh context for activation sharding constraints.
+
+Model code is mesh-agnostic; the launcher installs the active mesh (and the
+activation-partitioning policy) here, and layers call ``constrain`` which
+no-ops when no mesh is installed (CPU tests) — so the same model code runs
+unsharded on a laptop and sequence-sharded on the production mesh.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass
+class ActivationPolicy:
+    """Which logical activation dims to shard.
+
+    seq_shard: shard the sequence dim of residual-stream activations over
+    the 'model' axis between attention/mlp blocks (sequence parallelism) —
+    the norm/elementwise segments then run on 1/TP of the tokens and the
+    layer-boundary residual carry shrinks by TP x.
+    """
+
+    batch_axes: tuple = ("pod", "data")
+    seq_shard: bool = True
+
+
+_STATE = {"mesh": None, "policy": ActivationPolicy(), "dispatch_groups": 1}
+
+
+def set_mesh(mesh: Optional[Mesh], policy: Optional[ActivationPolicy] = None):
+    _STATE["mesh"] = mesh
+    if policy is not None:
+        _STATE["policy"] = policy
+    # MoE dispatch groups = number of batch shards: routing/capacity become
+    # shard-local, so the dispatch scatter never crosses shards (measured
+    # TB-scale all-reduces otherwise — EXPERIMENTS.md §Perf iteration 2).
+    if mesh is None:
+        _STATE["dispatch_groups"] = 1
+    else:
+        g = 1
+        for a in _STATE["policy"].batch_axes:
+            if a in mesh.axis_names:
+                g *= mesh.shape[a]
+        _STATE["dispatch_groups"] = g
+
+
+def get_mesh() -> Optional[Mesh]:
+    return _STATE["mesh"]
+
+
+def dispatch_groups(num_experts: int | None = None) -> int:
+    """MoE dispatch group count.
+
+    Grouped (shard-local) dispatch is only a win when experts are TP'd
+    *inside* (E doesn't divide the model axis).  In the EP regime (E on
+    'model') the grouped scatter/gather fights the two-axis sharding and
+    XLA falls back to full rematerialization — measured 10x collective
+    regressions (§Perf deepseek iterations, both refuted) — so EP keeps
+    the ungrouped layout.
+    """
+    mesh = _STATE["mesh"]
+    if (num_experts is not None and mesh is not None
+            and "model" in mesh.axis_names
+            and num_experts % mesh.shape["model"] == 0):
+        return 1
+    return _STATE["dispatch_groups"]
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Optional[Mesh], policy: Optional[ActivationPolicy] = None):
+    prev = dict(_STATE)
+    set_mesh(mesh, policy)
+    try:
+        yield
+    finally:
+        _STATE.update(prev)
+
+
+def constrain_group_axis(x: jax.Array) -> jax.Array:
+    """Pin a [G, ...] grouped tensor's leading dim to the batch axes."""
+    mesh = _STATE["mesh"]
+    if mesh is None:
+        return x
+    axes = tuple(a for a in _STATE["policy"].batch_axes if a in mesh.axis_names)
+    if not axes or x.shape[0] % _axis_prod(mesh, axes):
+        return x
+    spec = P(axes, *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def constrain_moe_buffers(x: jax.Array) -> jax.Array:
+    """Pin [G, E, C, D] MoE dispatch buffers: G on the batch axes, E on
+    'model' when the expert count divides it (expert parallelism).  Keeping
+    both assignments in ONE constraint is essential: constraining G alone
+    fights EP propagation and triggers resharding storms (§Perf, deepseek
+    iteration 1 refuted)."""
+    mesh = _STATE["mesh"]
+    if mesh is None or x.ndim != 4:
+        return x
+    axes = tuple(a for a in _STATE["policy"].batch_axes if a in mesh.axis_names)
+    g_axes = axes if axes and x.shape[0] % _axis_prod(mesh, axes) == 0 else None
+    e_axis = ("model" if "model" in mesh.axis_names
+              and x.shape[1] % mesh.shape["model"] == 0 else None)
+    if g_axes is None and e_axis is None:
+        return x
+    spec = P(g_axes, e_axis, None, None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def _axis_prod(mesh, axes) -> int:
+    out = 1
+    for a in axes:
+        out *= mesh.shape[a]
+    return out
+
+
+def _divisible_axes(dim: int, mesh: Mesh, axes) -> Optional[tuple]:
+    use = []
+    size = 1
+    for a in axes:
+        if a in mesh.axis_names and dim % (size * mesh.shape[a]) == 0:
+            use.append(a)
+            size *= mesh.shape[a]
+    return tuple(use) if use else None
+
+
+def constrain_residual(x: jax.Array) -> jax.Array:
+    """Shard a residual-stream activation [B, S, D]: batch over data axes,
+    sequence over 'model' when the policy enables it."""
+    mesh = _STATE["mesh"]
+    if mesh is None or x.ndim != 3:
+        return x
+    policy = _STATE["policy"]
+    b_axes = _divisible_axes(x.shape[0], mesh, policy.batch_axes)
+    s_axis = None
+    if policy.seq_shard and "model" in mesh.axis_names \
+            and x.shape[1] % mesh.shape["model"] == 0:
+        s_axis = "model"
+    spec = P(b_axes, s_axis, None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,88 @@
+"""Fault tolerance: straggler watchdog and elastic rescale planning.
+
+Single-host container => the *mechanisms* are real and unit-tested; the
+multi-host signals (per-host step heartbeats) arrive through the same
+interfaces a cluster launcher would feed.
+
+StragglerWatchdog — detects hosts whose step times are persistent outliers
+(median + k*MAD over a sliding window).  The launcher polls ``verdict()``
+each step: "ok" / "warn" (log + telemetry) / "evict" (trigger elastic
+rescale without the slow host).
+
+ElasticPlan — given a device loss, picks the largest valid (data, model)
+mesh that fits the remaining chips (model axis preserved — TP degree is a
+compile-time property of the sharded program; the data axis shrinks), and
+the checkpoint restore path reshards the state (see
+checkpoint.Checkpointer.restore with the new plan's shardings).
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import statistics
+from typing import Optional
+
+
+class StragglerWatchdog:
+    def __init__(self, window: int = 16, mad_factor: float = 4.0,
+                 evict_after: int = 6):
+        self.window = window
+        self.mad_factor = mad_factor
+        self.evict_after = evict_after
+        self._times: dict = collections.defaultdict(
+            lambda: collections.deque(maxlen=window))
+        self._strikes: dict = collections.defaultdict(int)
+
+    def record(self, host: str, step_time: float):
+        self._times[host].append(step_time)
+
+    def verdict(self) -> dict:
+        """{host: 'ok'|'warn'|'evict'} based on cross-host outlier stats."""
+        latest = {h: t[-1] for h, t in self._times.items() if t}
+        if len(latest) < 3:
+            return {h: "ok" for h in latest}
+        med = statistics.median(latest.values())
+        mad = statistics.median(abs(v - med) for v in latest.values()) or 1e-9
+        out = {}
+        for h, v in latest.items():
+            if v > med + self.mad_factor * mad and v > 1.2 * med:
+                self._strikes[h] += 1
+            else:
+                self._strikes[h] = 0
+            if self._strikes[h] >= self.evict_after:
+                out[h] = "evict"
+            elif self._strikes[h] > 0:
+                out[h] = "warn"
+            else:
+                out[h] = "ok"
+        return out
+
+
+@dataclasses.dataclass
+class ElasticPlan:
+    data: int
+    model: int
+
+    @property
+    def devices(self) -> int:
+        return self.data * self.model
+
+
+def plan_rescale(current_data: int, current_model: int,
+                 available_devices: int) -> Optional[ElasticPlan]:
+    """Largest (data', model) mesh with data' <= current_data that fits.
+
+    Keeps the model (TP) axis fixed — resharding TP changes per-op partition
+    shapes; shrinking the data axis only re-balances batch and FSDP shards,
+    which the checkpoint restore path handles.
+    """
+    if available_devices < current_model:
+        return None
+    data = min(current_data, available_devices // current_model)
+    # data axis must divide the global batch in practice; prefer powers of 2.
+    while data > 1 and (current_data % data != 0):
+        data -= 1
+    if data < 1:
+        return None
+    return ElasticPlan(data=data, model=current_model)

@@ -1,0 +1,215 @@
+"""Sharding rules: parameter/cache pytrees -> NamedSharding trees.
+
+A small rule engine keyed on parameter-path substrings and tensor rank, not
+a hand-written spec per architecture: every pool config flows through the
+same rules.  The scheme is 2-D sharding (MaxText-style):
+
+  * "model" axis: heads / d_ff / experts / vocab — the TP dimension.
+  * "data" (+ optionally "pod") axis: the complementary weight dimension —
+    FSDP / ZeRO-3; optimizer state inherits the parameter sharding verbatim
+    (see repro.optim.adamw).
+  * scan-stacked leading layer dims are never sharded.
+
+``auto_shard_params`` walks the param pytree; each rule sees
+(path, ndim, shape) and returns a PartitionSpec.  Divisibility is always
+verified — a dimension that doesn't divide falls back to replication on that
+axis (recorded, so the dry-run can report imperfect sharding rather than
+silently compiling something else).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass
+class ShardingPlan:
+    shardings: dict          # flat {path: NamedSharding}
+    fallbacks: list          # paths where divisibility forced replication
+    fsdp_axes: tuple         # axes used for the FSDP dimension
+    tp_axis: str
+
+    def tree_for(self, tree):
+        """Rebuild a pytree of NamedShardings matching ``tree``."""
+        flat, treedef = jax.tree.flatten_with_path(tree)
+        out = [self.shardings[_path_str(p)] for p, _ in flat]
+        return jax.tree.unflatten(treedef, out)
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _fits(dim: int, mesh: Mesh, axes) -> bool:
+    return dim % _axis_size(mesh, axes) == 0
+
+
+# Substrings that identify the TP ("model"-sharded) dimension of a weight.
+_TP_LAST_DIM = ("wq", "wk", "wv", "w_up", "w_gate", "w_uq", "w_uk", "w_uv",
+                "unembed", "router")
+_TP_FIRST_DIM = ("wo", "w_down", "w_o", "w_out")
+_EXPERT_STACKED = ("w_gate", "w_up", "w_down")  # under a "moe" prefix: [E, ., .]
+
+
+def spec_for_param(path: str, shape: tuple, mesh: Mesh,
+                   fsdp_axes, tp_axis: str) -> tuple[P, bool]:
+    """Returns (PartitionSpec, used_fallback)."""
+    ndim = len(shape)
+    name = path.rsplit("/", 1)[-1]
+    in_moe = "/moe/" in path or path.endswith("moe")
+    # Scan-stacked params carry a leading layer dim -> never sharded.
+    # We detect it structurally: segment params have ndim >= 2 with leading L.
+    lead = 1 if "segments/" in path or "encoder/" in path or "decoder/" in path else 0
+
+    def build(dim_assign: dict) -> tuple[P, bool]:
+        spec = [None] * ndim
+        fell_back = False
+        for d, axes in dim_assign.items():
+            if axes is None:
+                continue
+            if _fits(shape[d], mesh, axes):
+                spec[d] = axes
+            else:
+                fell_back = True
+        return P(*spec), fell_back
+
+    if ndim - lead == 3 and in_moe and name in _EXPERT_STACKED:
+        # Expert-stacked weights [*, E, din, dout].
+        e_dim, a, b = lead, lead + 1, lead + 2
+        if _fits(shape[e_dim], mesh, tp_axis):
+            # EP: experts on the model axis, FSDP over the larger inner dim.
+            inner = a if shape[a] >= shape[b] else b
+            return build({e_dim: tp_axis, inner: fsdp_axes})
+        # Expert count doesn't divide the TP axis (e.g. mixtral's 8 experts
+        # on a 16-way axis): replicating experts would replicate the whole
+        # MoE FFN compute (measured 25x flops waste — EXPERIMENTS.md §Perf
+        # iteration 1).  Instead use TP *inside* each expert: the expert
+        # hidden dim goes on 'model', the d_model dim on the FSDP axes.
+        hidden_dim = b if name in ("w_gate", "w_up") else a
+        other = a if hidden_dim == b else b
+        return build({hidden_dim: tp_axis, other: fsdp_axes})
+
+    if ndim - lead == 2:
+        a, b = lead, lead + 1
+        if name in _TP_LAST_DIM:
+            return build({b: tp_axis, a: fsdp_axes})
+        if name in _TP_FIRST_DIM:
+            return build({a: tp_axis, b: fsdp_axes})
+        if name == "embed":
+            return build({a: tp_axis, b: fsdp_axes})  # vocab on model
+        # Generic matrices (LoRA projections, conv, mixes): FSDP the larger
+        # dim, TP the other if it divides.
+        big = a if shape[a] >= shape[b] else b
+        small = b if big == a else a
+        return build({big: fsdp_axes, small: tp_axis})
+
+    if ndim - lead == 1 and shape[lead] >= 1024:
+        return build({lead: fsdp_axes})
+    # Scalars, small vectors, norm params: replicate.
+    return P(), False
+
+
+def auto_shard_params(param_tree, mesh: Mesh, *, fsdp_over_pod: bool = False,
+                      serve_mode: bool = False) -> ShardingPlan:
+    """Build NamedShardings for a parameter (or ShapeDtypeStruct) pytree.
+
+    serve_mode: replicate the FSDP dimension (TP-only sharding).  At serving
+    there is no optimizer state, so FSDP buys nothing and costs a per-layer
+    parameter all-gather on every decode step (measured — EXPERIMENTS.md
+    §Perf iteration 3); replication removes it whenever the TP-sharded
+    parameters fit HBM.
+    """
+    tp_axis = "model"
+    if serve_mode:
+        fsdp_axes = None
+    elif fsdp_over_pod and "pod" in mesh.axis_names:
+        fsdp_axes: tuple | str = ("pod", "data")
+    else:
+        fsdp_axes = "data"
+    flat, _ = jax.tree.flatten_with_path(param_tree)
+    shardings = {}
+    fallbacks = []
+    for path, leaf in flat:
+        ps = _path_str(path)
+        spec, fb = spec_for_param(ps, tuple(leaf.shape), mesh, fsdp_axes, tp_axis)
+        shardings[ps] = NamedSharding(mesh, spec)
+        if fb:
+            fallbacks.append(ps)
+    if fsdp_axes is None:
+        fsdp_tuple: tuple = ()
+    elif isinstance(fsdp_axes, tuple):
+        fsdp_tuple = fsdp_axes
+    else:
+        fsdp_tuple = (fsdp_axes,)
+    return ShardingPlan(shardings=shardings, fallbacks=fallbacks,
+                        fsdp_axes=fsdp_tuple, tp_axis=tp_axis)
+
+
+def batch_spec(batch_size: int, mesh: Mesh) -> P:
+    """Shard the batch dim over as many data axes as divide it."""
+    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    use = []
+    size = 1
+    for a in axes:
+        if batch_size % (size * mesh.shape[a]) == 0:
+            use.append(a)
+            size *= mesh.shape[a]
+    return P(tuple(use)) if use else P()
+
+
+def cache_spec(shape: tuple, batch_size: int, mesh: Mesh, path: str = "") -> P:
+    """KV/state cache sharding: batch over data axes; the sequence (buffer)
+    dim of K/V tensors over 'model' (sequence-parallel serving).  Falls back
+    to replication for non-divisible dims."""
+    bspec = batch_spec(batch_size, mesh)
+    b_axes = bspec[0] if len(bspec) else None
+    spec = [None] * len(shape)
+    # Caches are stacked [L, B, S, ...] (layer dim first under vmap/scan).
+    if len(shape) >= 3:
+        spec[1] = b_axes if (b_axes and _fits(shape[1], mesh, b_axes)) else None
+        if len(shape) >= 4 and _fits(shape[2], mesh, "model"):
+            spec[2] = "model"
+    return P(*spec)
+
+
+def auto_shard_cache(cache_tree, batch_size: int, mesh: Mesh):
+    def one(path, leaf):
+        return NamedSharding(
+            mesh, cache_spec(tuple(leaf.shape), batch_size, mesh,
+                             _path_str(path)))
+    flat, treedef = jax.tree.flatten_with_path(cache_tree)
+    return jax.tree.unflatten(treedef, [one(p, l) for p, l in flat])
+
+
+def estimate_bytes_per_device(tree, plan: ShardingPlan, mesh: Mesh,
+                              optimizer_multiplier: float = 0.0) -> float:
+    """Parameter bytes per device under the plan (+ optional optimizer
+    overhead expressed as a multiple of fp32 param bytes)."""
+    flat, _ = jax.tree.flatten_with_path(tree)
+    total = 0.0
+    for path, leaf in flat:
+        sh = plan.shardings[_path_str(path)]
+        n_shards = 1
+        for d, axes in enumerate(sh.spec):
+            if axes is None:
+                continue
+            n_shards *= _axis_size(mesh, axes)
+        elems = int(np.prod(leaf.shape))
+        itemsize = jax.numpy.dtype(leaf.dtype).itemsize
+        total += elems * itemsize / n_shards
+        if optimizer_multiplier:
+            total += elems * 4 * optimizer_multiplier / n_shards
+    return total

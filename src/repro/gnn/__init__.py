@@ -1,0 +1,14 @@
+from repro.gnn.datasets import (
+    GRAPH_CLASSIFICATION,
+    NODE_CLASSIFICATION,
+    TABLE2,
+    load,
+)
+from repro.gnn.models import GAT, GCN, GIN, GraphSAGE, build_model
+from repro.gnn.train import (
+    eval_graph_classifier,
+    eval_node_classifier,
+    node_graph_arrays,
+    train_graph_classifier,
+    train_node_classifier,
+)

@@ -1,0 +1,202 @@
+"""GNN layers built on the GReTA decomposition (gather/reduce/transform/activate).
+
+Each conv exposes the two execution backends:
+
+  apply         — edge-list backend (training / oracle)
+  apply_blocked — GHOST V x N blocked backend (serving; numerically equal)
+
+and an optional quantized combine (the photonic 8-bit sign-split MVM).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aggregate import (
+    BlockedGraph,
+    ReduceOp,
+    aggregate_blocked,
+    aggregate_edges,
+    attention_aggregate_blocked,
+)
+from repro.photonic.quant import QuantConfig, quantized_matmul
+
+
+def init_linear(key, f_in: int, f_out: int, bias: bool = True) -> dict:
+    wkey, _ = jax.random.split(key)
+    scale = (2.0 / (f_in + f_out)) ** 0.5
+    p = {"w": scale * jax.random.normal(wkey, (f_in, f_out), jnp.float32)}
+    if bias:
+        p["b"] = jnp.zeros((f_out,), jnp.float32)
+    return p
+
+
+def _matmul(x, w, quantized: bool):
+    if quantized:
+        return quantized_matmul(x, w, QuantConfig())
+    return x @ w
+
+
+def _linear(x, p, quantized: bool):
+    y = _matmul(x, p["w"], quantized)
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def _to_dst_rows(x, pad_dst: int):
+    """Pad-or-slice a source-padded [G_src*N, ...] array to [G_dst*V, ...]."""
+    need = pad_dst - x.shape[0]
+    if need > 0:
+        x = jnp.pad(x, ((0, need),) + ((0, 0),) * (x.ndim - 1))
+    return x[:pad_dst]
+
+
+# ---------------------------------------------------------------------------
+# GCN (Kipf & Welling) — aggregate(sum, Â) -> transform -> activate.
+# ---------------------------------------------------------------------------
+
+
+class GCNConv:
+    @staticmethod
+    def init(key, f_in, f_out):
+        return init_linear(key, f_in, f_out)
+
+    @staticmethod
+    def apply(p, feat, edge_src, edge_dst, edge_weight, num_nodes,
+              quantized=False):
+        h = aggregate_edges(edge_src, edge_dst, feat, num_nodes,
+                            ReduceOp.SUM, edge_weight)
+        return _linear(h, p, quantized)
+
+    @staticmethod
+    def apply_blocked(p, bg: BlockedGraph, feat_padded, quantized=False):
+        # GCN normalization is baked into the partition blocks.
+        h = aggregate_blocked(bg, feat_padded, ReduceOp.SUM)
+        return _linear(h, p, quantized)
+
+
+# ---------------------------------------------------------------------------
+# GraphSAGE (mean) — h' = W_self h + W_neigh mean(h_u).
+# ---------------------------------------------------------------------------
+
+
+class SAGEConv:
+    @staticmethod
+    def init(key, f_in, f_out):
+        k1, k2 = jax.random.split(key)
+        return {"self": init_linear(k1, f_in, f_out),
+                "neigh": init_linear(k2, f_in, f_out, bias=False)}
+
+    @staticmethod
+    def apply(p, feat, edge_src, edge_dst, edge_weight, num_nodes,
+              quantized=False):
+        h = aggregate_edges(edge_src, edge_dst, feat, num_nodes, ReduceOp.MEAN)
+        return _linear(feat, p["self"], quantized) + _linear(h, p["neigh"], quantized)
+
+    @staticmethod
+    def apply_blocked(p, bg: BlockedGraph, feat_padded, quantized=False):
+        h = aggregate_blocked(bg, feat_padded, ReduceOp.MEAN)
+        self_feat = _to_dst_rows(feat_padded, bg.num_dst_groups * bg.v)
+        return _linear(self_feat, p["self"], quantized) + _linear(h, p["neigh"], quantized)
+
+
+# ---------------------------------------------------------------------------
+# GIN — h' = MLP((1 + eps) h + sum(h_u)).
+# ---------------------------------------------------------------------------
+
+
+class GINConv:
+    @staticmethod
+    def init(key, f_in, f_out, mlp_layers=4, hidden=None):
+        hidden = hidden or f_out
+        keys = jax.random.split(key, mlp_layers)
+        dims = [f_in] + [hidden] * (mlp_layers - 1) + [f_out]
+        mlp = [init_linear(k, dims[i], dims[i + 1]) for i, k in enumerate(keys)]
+        return {"eps": jnp.zeros(()), "mlp": mlp}
+
+    @staticmethod
+    def _mlp(p, x, quantized):
+        for i, layer in enumerate(p["mlp"]):
+            x = _linear(x, layer, quantized)
+            if i + 1 < len(p["mlp"]):
+                x = jax.nn.relu(x)
+        return x
+
+    @staticmethod
+    def apply(p, feat, edge_src, edge_dst, edge_weight, num_nodes,
+              quantized=False):
+        h = aggregate_edges(edge_src, edge_dst, feat, num_nodes, ReduceOp.SUM)
+        return GINConv._mlp(p, (1.0 + p["eps"]) * feat + h, quantized)
+
+    @staticmethod
+    def apply_blocked(p, bg: BlockedGraph, feat_padded, quantized=False):
+        h = aggregate_blocked(bg, feat_padded, ReduceOp.SUM)
+        self_feat = _to_dst_rows(feat_padded, bg.num_dst_groups * bg.v)
+        return GINConv._mlp(p, (1.0 + p["eps"]) * self_feat + h, quantized)
+
+
+# ---------------------------------------------------------------------------
+# GAT — transform-first: e_uv = leaky_relu(a . [W h_v || W h_u]), softmax,
+# weighted sum.  Multi-head with concat (hidden layers) or mean (output).
+# ---------------------------------------------------------------------------
+
+
+class GATConv:
+    @staticmethod
+    def init(key, f_in, f_out, heads=1):
+        k1, k2, k3 = jax.random.split(key, 3)
+        scale = (2.0 / (f_in + f_out)) ** 0.5
+        return {
+            "w": scale * jax.random.normal(k1, (f_in, heads, f_out)),
+            "a_src": 0.1 * jax.random.normal(k2, (heads, f_out)),
+            "a_dst": 0.1 * jax.random.normal(k3, (heads, f_out)),
+            "b": jnp.zeros((heads, f_out)),
+        }
+
+    @staticmethod
+    def _project(p, feat, quantized):
+        heads, f_out = p["a_src"].shape
+        w2d = p["w"].reshape(feat.shape[-1], heads * f_out)
+        wh = _matmul(feat, w2d, quantized)
+        return wh.reshape(feat.shape[0], heads, f_out)
+
+    @staticmethod
+    def apply(p, feat, edge_src, edge_dst, edge_weight, num_nodes,
+              quantized=False, concat=True, negative_slope=0.2):
+        wh = GATConv._project(p, feat, quantized)                # [N,H,F]
+        s_src = (wh * p["a_src"]).sum(-1)                        # [N,H]
+        s_dst = (wh * p["a_dst"]).sum(-1)
+        logits = jax.nn.leaky_relu(
+            s_dst[edge_dst] + s_src[edge_src], negative_slope
+        )                                                        # [E,H]
+        m = jax.ops.segment_max(logits, edge_dst, num_segments=num_nodes)
+        m = jnp.where(jnp.isfinite(m), m, 0.0)
+        z = jnp.exp(logits - m[edge_dst])
+        denom = jax.ops.segment_sum(z, edge_dst, num_segments=num_nodes)
+        alpha = z / jnp.maximum(denom[edge_dst], 1e-30)          # [E,H]
+        msgs = alpha[..., None] * wh[edge_src]                   # [E,H,F]
+        out = jax.ops.segment_sum(msgs, edge_dst, num_segments=num_nodes)
+        out = out + p["b"]
+        if concat:
+            return out.reshape(num_nodes, -1)
+        return out.mean(axis=1)
+
+    @staticmethod
+    def apply_blocked(p, bg: BlockedGraph, feat_padded, quantized=False,
+                      concat=True, negative_slope=0.2):
+        wh = GATConv._project(p, feat_padded, quantized)         # [Npad,H,F]
+        s_src = (wh * p["a_src"]).sum(-1)
+        s_dst = (wh * p["a_dst"]).sum(-1)
+        pad_dst = bg.num_dst_groups * bg.v
+        out = attention_aggregate_blocked(
+            bg, wh, s_src, _to_dst_rows(s_dst, pad_dst), negative_slope
+        )                                                        # [pad_dst,H,F]
+        out = out + p["b"]
+        if concat:
+            return out.reshape(pad_dst, -1)
+        return out.mean(axis=1)

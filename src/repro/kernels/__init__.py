@@ -1,0 +1,9 @@
+# Pallas TPU kernels for the paper's two compute hot-spots:
+#   block_spmm   — blocked-sparse aggregation (GHOST aggregate stage)
+#   quant_matmul — int8 sign-split MVM (GHOST combine stage)
+# ops.py holds the jit'd wrappers (interpret=True on CPU); ref.py the oracles.
+from repro.kernels.ops import (
+    aggregate_blocked_kernel,
+    block_spmm_padded,
+    quantized_matmul_kernel,
+)

@@ -1,0 +1,120 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On CPU (this container) the kernels run in ``interpret=True`` mode — the
+kernel body executes in Python with the same block/grid semantics, which is
+how correctness is validated offline.  On TPU backends the compiled kernels
+run natively.  ``auto_interpret()`` picks per backend.
+
+The wrappers also handle padding to tile multiples so callers can pass
+arbitrary shapes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.partition import PartitionedGraph
+from repro.kernels.block_spmm import block_spmm
+from repro.kernels.quant_matmul import quant_matmul
+from repro.kernels import ref
+from repro.photonic.quant import QuantConfig, compute_scale, quantize, quantize_weights
+
+
+def auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, multiple: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("num_dst_groups", "block_f", "interpret"))
+def block_spmm_padded(
+    blocks: jax.Array,
+    block_row: jax.Array,
+    block_col: jax.Array,
+    feat: jax.Array,
+    num_dst_groups: int,
+    block_f: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """block_spmm with automatic feature-dim padding.  Returns [G_dst*V, F]."""
+    interpret = auto_interpret() if interpret is None else interpret
+    f = feat.shape[1]
+    featp = _pad_to(feat, 1, block_f)
+    out = block_spmm(
+        blocks, block_row, block_col, featp, num_dst_groups,
+        block_f=block_f, interpret=interpret,
+    )
+    # Destination groups with no tiles are never visited by the kernel, so
+    # their output blocks are uninitialized; zero them here.
+    v = blocks.shape[1]
+    visited = jnp.zeros((num_dst_groups,), jnp.bool_).at[block_row].set(True)
+    out = jnp.where(jnp.repeat(visited, v)[:, None], out, 0.0)
+    return out[:, :f]
+
+
+def aggregate_blocked_kernel(pg_or_bg, feat_padded: jax.Array,
+                             block_f: int = 128,
+                             interpret: bool | None = None) -> jax.Array:
+    """GHOST blocked aggregation via the Pallas kernel.
+
+    Accepts a PartitionedGraph (numpy) or BlockedGraph (device) container.
+    """
+    if isinstance(pg_or_bg, PartitionedGraph):
+        blocks = jnp.asarray(pg_or_bg.blocks)
+        row = jnp.asarray(pg_or_bg.block_row)
+        col = jnp.asarray(pg_or_bg.block_col)
+        g_dst = pg_or_bg.num_dst_groups
+    else:
+        blocks, row, col = pg_or_bg.blocks, pg_or_bg.block_row, pg_or_bg.block_col
+        g_dst = pg_or_bg.num_dst_groups
+    return block_spmm_padded(blocks, row, col, feat_padded, g_dst,
+                             block_f=block_f, interpret=interpret)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "block_k", "interpret"),
+)
+def quantized_matmul_kernel(
+    x: jax.Array,          # [M, K] float
+    w: jax.Array,          # [K, N] float
+    block_m: int = 256,
+    block_n: int = 256,
+    block_k: int = 256,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Quantize x (per-tensor) and w (per-channel), multiply on the int8
+    kernel, dequantize.  Matches photonic.quant.quantized_matmul numerics."""
+    interpret = auto_interpret() if interpret is None else interpret
+    cfg = QuantConfig()
+    sx = compute_scale(x, axis=None, qmax=cfg.qmax)
+    xq = quantize(x, sx, cfg.qmax)
+    wq, sw = quantize_weights(w, cfg)
+
+    m, k = xq.shape
+    n = wq.shape[1]
+    bm, bn, bk = (min(block_m, m), min(block_n, n), min(block_k, k))
+    xq = _pad_to(_pad_to(xq, 0, bm), 1, bk)
+    wq = _pad_to(_pad_to(wq, 0, bk), 1, bn)
+    swp = _pad_to(sw.reshape(-1), 0, bn)
+
+    out = quant_matmul(
+        xq, wq,
+        jnp.asarray([sx], jnp.float32).reshape(1),
+        swp.astype(jnp.float32),
+        block_m=bm, block_n=bn, block_k=bk,
+        out_dtype=jnp.float32,
+        interpret=interpret,
+    )
+    return out[:m, :n].astype(w.dtype)

@@ -1,0 +1,90 @@
+"""Pallas TPU kernel: int8 sign-split quantized matmul (GHOST combine stage).
+
+TPU adaptation of the photonic MR-bank MVM (Section 3.3.2): activations and
+weights are 8-bit amplitude levels (sign-split, N_levels = 2^7 per polarity),
+products accumulate in the analog domain and a balanced photodetector takes
+the signed difference.  On the MXU this is an int8 x int8 -> int32 matmul
+with per-output-channel scale recovery — serving fast path for the combine
+block and for every LM linear layer with ``quantized=true``.
+
+Tiling: classic (M, N, K) grid with the K loop innermost; the int32
+accumulator lives in the revisited output VMEM block; dequantization happens
+on the last K step only (the BPD + transimpedance stage), writing float out.
+
+VMEM working set per step: bm x bk int8 + bk x bn int8 + bm x bn int32/f32.
+All tile dims default to MXU-aligned 128/256 multiples.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, sx_ref, sw_ref, out_ref, acc_ref, *, k_steps):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], w_ref[...],
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+    @pl.when(ki == k_steps - 1)
+    def _finish():
+        # BPD recombination + rescale: per-tensor activation scale x
+        # per-output-channel weight scale.
+        scale = sx_ref[0] * sw_ref[...]           # [bn]
+        out_ref[...] = (acc_ref[...].astype(jnp.float32)
+                        * scale[None, :]).astype(out_ref.dtype)
+
+
+def quant_matmul(
+    x_q: jax.Array,        # [M, K] int8 quantized activations
+    w_q: jax.Array,        # [K, N] int8 quantized weights
+    x_scale: jax.Array,    # [1] f32 per-tensor activation scale
+    w_scale: jax.Array,    # [N] f32 per-channel weight scales
+    block_m: int = 256,
+    block_n: int = 256,
+    block_k: int = 256,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jax.Array:
+    """Tiled int8 matmul with fused dequantization. Returns [M, N] float."""
+    m, k = x_q.shape
+    k2, n = w_q.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch {k} vs {k2}")
+    block_m = min(block_m, m)
+    block_n = min(block_n, n)
+    block_k = min(block_k, k)
+    if m % block_m or n % block_n or k % block_k:
+        raise ValueError(
+            f"shapes ({m},{k})x({k},{n}) not divisible by tiles "
+            f"({block_m},{block_n},{block_k}); pad at the call site"
+        )
+    k_steps = k // block_k
+    grid = (m // block_m, n // block_n, k_steps)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, k_steps=k_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda mi, ni, ki: (mi, ki)),
+            pl.BlockSpec((block_k, block_n), lambda mi, ni, ki: (ki, ni)),
+            pl.BlockSpec((1,), lambda mi, ni, ki: (0,)),
+            pl.BlockSpec((block_n,), lambda mi, ni, ki: (ni,)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda mi, ni, ki: (mi, ni)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.int32)],
+        interpret=interpret,
+    )(x_q, w_q, x_scale, w_scale)

@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for the Pallas kernels (the numerics contract).
+
+Every kernel test sweeps shapes/dtypes and asserts allclose against these.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def block_spmm_ref(
+    blocks: jax.Array,      # [B, V, N]
+    block_row: jax.Array,   # [B]
+    block_col: jax.Array,   # [B]
+    feat: jax.Array,        # [G_src * N, F]
+    num_dst_groups: int,
+) -> jax.Array:
+    """out[r] = sum_{b: row(b)=r} blocks[b] @ feat[col(b)]  -> [G_dst*V, F]."""
+    _, v, n = blocks.shape
+    f = feat.shape[1]
+    src_tiles = feat.reshape(-1, n, f)[block_col]          # [B, N, F]
+    partial = jnp.einsum(
+        "bvn,bnf->bvf", blocks, src_tiles.astype(blocks.dtype)
+    )
+    out = jax.ops.segment_sum(partial, block_row, num_segments=num_dst_groups)
+    return out.reshape(num_dst_groups * v, f).astype(feat.dtype)
+
+
+def quant_matmul_ref(
+    x_q: jax.Array,        # [M, K] int8
+    w_q: jax.Array,        # [K, N] int8
+    x_scale: jax.Array,    # [1] f32
+    w_scale: jax.Array,    # [N] f32
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    acc = jax.lax.dot_general(
+        x_q, w_q, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+    return (acc.astype(jnp.float32) * (x_scale[0] * w_scale)[None, :]).astype(out_dtype)

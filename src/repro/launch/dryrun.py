@@ -1,0 +1,389 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("DRYRUN_XLA_FLAGS")
+                           or "--xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+THE FIRST TWO LINES of this module set XLA_FLAGS before any jax import —
+jax locks the device count at first initialization.  Do not move them.
+
+For each cell this driver:
+  1. builds the model from its pool config and takes abstract
+     ShapeDtypeStruct params/caches (jax.eval_shape — nothing is allocated),
+  2. derives the sharding plan (FSDP x TP; FSDP widened across the pod axis
+     when the training state would not fit pod-local HBM),
+  3. jit-lowers and compiles train_step / prefill_step / decode_step under
+     the production mesh,
+  4. records memory_analysis / cost_analysis / collective-bytes, applies the
+     scan trip-count correction (see repro.roofline.analysis), computes the
+     three-term roofline, and appends a JSON record under
+     experiments/dryrun/.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --mesh both --out experiments/dryrun
+"""
+
+import argparse
+import dataclasses
+import functools
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.common.utils import tree_bytes
+from repro.configs import ARCH_NAMES, get_config
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import (
+    auto_shard_cache,
+    auto_shard_params,
+    batch_spec,
+    estimate_bytes_per_device,
+)
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model
+from repro.models.transformer import DecoderLM
+from repro.optim import AdamWConfig, adamw_init, adamw_step
+from repro.roofline.analysis import (
+    CellMetrics,
+    Roofline,
+    metrics_from_compiled,
+    model_flops,
+    total_params,
+    active_params,
+)
+
+SHAPES = {
+    "train_4k": dict(seq_len=4096, global_batch=256, kind="train"),
+    "prefill_32k": dict(seq_len=32768, global_batch=32, kind="prefill"),
+    "decode_32k": dict(seq_len=32768, global_batch=128, kind="decode"),
+    "long_500k": dict(seq_len=524288, global_batch=1, kind="decode"),
+}
+
+# Per-device HBM budget (v5e: 16 GB) used to decide pod-wide FSDP.
+HBM_BUDGET = 13e9
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    sh = SHAPES[shape_name]
+    s, b = sh["seq_len"], sh["global_batch"]
+    i32 = jnp.int32
+    if sh["kind"] == "train":
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((b, s), i32),
+            "labels": jax.ShapeDtypeStruct((b, s), i32),
+        }
+        if cfg.encoder_layers:
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_frames, cfg.d_model), jnp.dtype(cfg.dtype))
+        return specs
+    if sh["kind"] == "prefill":
+        return {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+    # decode: one new token against a seq_len-deep cache
+    return {
+        "tokens": jax.ShapeDtypeStruct((b, 1), i32),
+        "pos": jax.ShapeDtypeStruct((), i32),
+    }
+
+
+def _cache_specs(model, cfg, batch, max_seq):
+    if cfg.encoder_layers:
+        params = model.param_specs()
+        frames = jax.ShapeDtypeStruct(
+            (batch, cfg.encoder_frames, cfg.d_model), jnp.dtype(cfg.dtype))
+        return jax.eval_shape(
+            lambda p, f: model.init_cache(p, f, batch, max_seq), params, frames)
+    return model.cache_specs(batch, max_seq)
+
+
+def build_step(model, cfg: ModelConfig, kind: str, opt_cfg: AdamWConfig):
+    if kind == "train":
+        def train_step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(
+                lambda p: model.loss(p, batch)[0])(params)
+            params, opt_state, metrics = adamw_step(grads, opt_state, params,
+                                                    opt_cfg)
+            return params, opt_state, loss
+        return train_step
+    if kind == "prefill":
+        def prefill_step(params, caches, tokens):
+            return model.prefill(params, tokens, caches)
+        return prefill_step
+
+    def decode_step(params, caches, tokens, pos):
+        return model.decode_step(params, caches, tokens, pos)
+    return decode_step
+
+
+def segment_variant_cfgs(cfg: ModelConfig):
+    """(depth-1 config, [configs with segment i at depth 2], segment counts).
+
+    Used for the scan trip-count correction.  Layer counts are encoded via
+    num_layers + structural fields; we reconstruct reduced configs whose
+    plan_segments() yields counts of 1 (and 2 for the probed segment).
+    """
+    from repro.models.transformer import plan_segments
+
+    segs = plan_segments(cfg) if cfg.encoder_layers == 0 else None
+    if cfg.encoder_layers:
+        # enc-dec: two "segments" (encoder, decoder scans).
+        base = dataclasses.replace(cfg, num_layers=1, encoder_layers=1,
+                                   scan_unroll=True)
+        v_enc = dataclasses.replace(base, encoder_layers=2)
+        v_dec = dataclasses.replace(base, num_layers=2)
+        return base, [v_enc, v_dec], [cfg.encoder_layers, cfg.num_layers]
+
+    counts = [s.count for s in segs]
+
+    def rebuild(per_seg_counts):
+        """Rebuild a config whose segments have the given counts."""
+        total = sum(per_seg_counts)
+        kw = dict(num_layers=total, scan_unroll=True)
+        if cfg.moe and cfg.moe.first_dense_layers:
+            kw["moe"] = dataclasses.replace(
+                cfg.moe, first_dense_layers=per_seg_counts[0])
+        if cfg.global_layer_indices:
+            # segments alternate global(1)/local(k): global layers keep
+            # count 1; rebuild indices from the local counts.
+            idx = []
+            pos = 0
+            for seg, c in zip(segs, per_seg_counts):
+                if seg.window == 0 and not cfg.moe:
+                    idx.append(pos)
+                pos += c
+            kw["global_layer_indices"] = tuple(idx)
+        return dataclasses.replace(cfg, **kw)
+
+    ones = [1] * len(counts)
+    base = rebuild(ones)
+    variants = []
+    for i in range(len(counts)):
+        v = list(ones)
+        v[i] = 2
+        variants.append(rebuild(v))
+    return base, variants, counts
+
+
+def lower_cell(cfg: ModelConfig, shape_name: str, mesh, *,
+               opts: frozenset = frozenset()):
+    """Lower+compile one cell on ``mesh``; returns the record dict.
+
+    opts: hillclimb optimization switches (EXPERIMENTS.md §Perf):
+      serve_replicate — TP-only (no-FSDP) parameter layout for serve cells.
+      kv_int8         — int8 quantized KV cache for serve cells.
+    """
+    sh = SHAPES[shape_name]
+    kind = sh["kind"]
+    b, s = sh["global_batch"], sh["seq_len"]
+    if kind != "train" and "kv_int8" in opts:
+        cfg = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    model = build_model(cfg)
+    pspecs = model.param_specs()
+
+    # FSDP-across-pods decision (training state = params + grads + m/v).
+    multi_pod = "pod" in mesh.axis_names
+    pbytes = tree_bytes(pspecs)
+    train_factor = 6.0 if kind == "train" else 1.0
+    data_shards = mesh.shape["data"] * mesh.shape["model"]
+    fsdp_over_pod = bool(
+        multi_pod and (pbytes * train_factor / data_shards > HBM_BUDGET))
+    serve_mode = bool(
+        kind != "train" and "serve_replicate" in opts
+        and pbytes / mesh.shape["model"] <= HBM_BUDGET)
+    plan = auto_shard_params(pspecs, mesh, fsdp_over_pod=fsdp_over_pod,
+                             serve_mode=serve_mode)
+    p_shard = plan.tree_for(pspecs)
+
+    bspec = batch_spec(b, mesh)
+    data_sh = NamedSharding(mesh, bspec)
+    rep = NamedSharding(mesh, P())
+
+    opt_cfg = AdamWConfig(lr=1e-4)
+    step = build_step(model, cfg, kind, opt_cfg)
+    specs = input_specs(cfg, shape_name)
+
+    if kind == "train":
+        opt_specs = jax.eval_shape(lambda p: adamw_init(p, opt_cfg), pspecs)
+        opt_shard = type(opt_specs)(step=rep, m=p_shard, v=p_shard)
+        in_spec_shardings = {
+            k: NamedSharding(mesh, bspec) if k != "frames" else data_sh
+            for k in specs
+        }
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_shard, opt_shard, in_spec_shardings),
+            out_shardings=(p_shard, opt_shard, rep),
+            donate_argnums=(0, 1),
+        )
+        args = (pspecs, opt_specs, specs)
+    else:
+        cspecs = _cache_specs(model, cfg, b, s)
+        c_shard = auto_shard_cache(cspecs, b, mesh)
+        if kind == "prefill":
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_shard, c_shard, data_sh),
+                out_shardings=(data_sh, c_shard),
+                donate_argnums=(1,),
+            )
+            args = (pspecs, cspecs, specs["tokens"])
+        else:
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_shard, c_shard, data_sh, rep),
+                out_shardings=(data_sh, c_shard),
+                donate_argnums=(1,),
+            )
+            args = (pspecs, cspecs, specs["tokens"], specs["pos"])
+
+    from repro.distributed.context import mesh_context
+
+    t0 = time.time()
+    with mesh_context(mesh):
+        lowered = jitted.lower(*args)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+
+    m = metrics_from_compiled(compiled)
+    record = {
+        "arch": cfg.name,
+        "shape": shape_name,
+        "mesh": "x".join(str(v) for v in mesh.devices.shape),
+        "axes": list(mesh.axis_names),
+        "kind": kind,
+        "opts": sorted(opts),
+        "serve_mode": serve_mode,
+        "fsdp_over_pod": fsdp_over_pod,
+        "sharding_fallbacks": plan.fallbacks[:20],
+        "lower_s": round(t1 - t0, 2),
+        "compile_s": round(t2 - t1, 2),
+        "param_bytes_total": pbytes,
+        "param_bytes_per_device": estimate_bytes_per_device(pspecs, plan, mesh),
+        "memory_analysis": {
+            "argument_bytes": m.argument_bytes,
+            "output_bytes": m.output_bytes,
+            "temp_bytes": m.temp_bytes,
+        },
+        "raw": {
+            "flops_per_device": m.flops,
+            "bytes_per_device": m.bytes_accessed,
+            "collective_bytes": m.collective,
+        },
+    }
+    return record, m, model
+
+
+def run_cell(cfg: ModelConfig, shape_name: str, mesh, *, correct: bool = True,
+             opts: frozenset = frozenset()):
+    record, m_full, _ = lower_cell(cfg, shape_name, mesh, opts=opts)
+    sh = SHAPES[shape_name]
+    num_chips = int(np.prod(mesh.devices.shape))
+
+    corrected = m_full
+    if correct:
+        try:
+            base_cfg, variant_cfgs, counts = segment_variant_cfgs(cfg)
+            _, m_base, _ = lower_cell(base_cfg, shape_name, mesh, opts=opts)
+            m_vars = []
+            for vc in variant_cfgs:
+                _, mv, _ = lower_cell(vc, shape_name, mesh, opts=opts)
+                m_vars.append(mv)
+            corrected = CellMetrics.accumulate_correction(
+                m_full, m_base, m_vars, counts)
+            record["correction"] = "per-segment-delta(unrolled)"
+        except Exception as e:  # pragma: no cover
+            record["correction"] = f"failed: {e}"
+    else:
+        record["correction"] = "none"
+
+    mf = model_flops(cfg, sh["kind"], sh["seq_len"], sh["global_batch"])
+    roof = Roofline.from_metrics(corrected, mf, num_chips)
+    record["corrected"] = {
+        "flops_per_device": corrected.flops,
+        "bytes_per_device": corrected.bytes_accessed,
+        "collective_bytes": corrected.collective,
+    }
+    record["roofline"] = roof.to_dict()
+    record["params_total"] = total_params(cfg)
+    record["params_active"] = active_params(cfg)
+    return record
+
+
+def cell_list(arch: str, shape: str):
+    archs = ARCH_NAMES if arch == "all" else (arch,)
+    shapes = tuple(SHAPES) if shape == "all" else (shape,)
+    cells = []
+    for a in archs:
+        cfg = get_config(a)
+        for s in shapes:
+            skip = None
+            if s == "long_500k" and not cfg.subquadratic:
+                skip = ("long_500k needs sub-quadratic attention; "
+                        f"{a} is full-attention (DESIGN.md skip policy)")
+            cells.append((a, s, skip))
+    return cells
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--no-correction", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--opt", default="",
+                    help="comma-separated optimization switches "
+                         "(e.g. serve_replicate)")
+    args = ap.parse_args()
+    opts = frozenset(o for o in args.opt.split(",") if o)
+
+    os.makedirs(args.out, exist_ok=True)
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("single_16x16", make_production_mesh(multi_pod=False)))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("multi_2x16x16", make_production_mesh(multi_pod=True)))
+
+    results = []
+    for mesh_name, mesh in meshes:
+        for arch, shape, skip in cell_list(args.arch, args.shape):
+            out_path = os.path.join(args.out, f"{arch}__{shape}__{mesh_name}.json")
+            if os.path.exists(out_path) and not args.force:
+                print(f"[skip-cached] {arch} x {shape} x {mesh_name}")
+                continue
+            if skip:
+                rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                       "skipped": skip}
+                with open(out_path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                print(f"[SKIP] {arch} x {shape}: {skip}")
+                continue
+            t0 = time.time()
+            try:
+                rec = run_cell(get_config(arch), shape, mesh,
+                               correct=not args.no_correction, opts=opts)
+                rec["mesh_name"] = mesh_name
+                status = (f"ok ({rec['compile_s']}s compile, "
+                          f"bottleneck={rec['roofline']['bottleneck']})")
+            except Exception as e:
+                rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                       "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-4000:]}
+                status = f"ERROR {type(e).__name__}: {e}"
+            with open(out_path, "w") as f:
+                json.dump(rec, f, indent=1, default=float)
+            print(f"[{time.time() - t0:7.1f}s] {arch} x {shape} x {mesh_name}: "
+                  f"{status}", flush=True)
+            results.append(rec)
+    print(f"done: {len(results)} cells executed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Production mesh definitions.
+
+``make_production_mesh`` is a FUNCTION (never a module-level constant) so
+importing this module touches no jax device state — required because the
+dry-run must set XLA_FLAGS before any jax initialization.
+
+Mesh shapes:
+  single-pod  (16, 16)      axes ("data", "model")   — 256 chips
+  multi-pod   (2, 16, 16)   axes ("pod", "data", "model") — 512 chips
+
+Axis roles:
+  pod    pure data parallelism across pods (gradient all-reduce crosses the
+         inter-pod links once per step); optionally joins the FSDP axis for
+         models that don't fit pod-local sharding (deepseek-v3 training).
+  data   batch parallelism + FSDP (ZeRO-3 parameter/optimizer sharding).
+  model  tensor parallelism (heads / d_ff / vocab / experts) and
+         KV-cache sequence parallelism when serving.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+    )
+
+
+def make_debug_mesh(devices_per_axis: tuple[int, ...] = (2, 2),
+                    axes: tuple[str, ...] = ("data", "model")):
+    """Small mesh for CPU-host tests (requires matching device count)."""
+    return jax.make_mesh(
+        devices_per_axis, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+    )
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    """Mesh axes usable for batch sharding, largest stride first."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

@@ -1,0 +1,3 @@
+from repro.models.model_zoo import build_model
+from repro.models.transformer import DecoderLM
+from repro.models.encdec import EncDecLM

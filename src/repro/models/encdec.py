@@ -1,0 +1,227 @@
+"""Encoder-decoder LM (whisper-medium).
+
+The audio conv frontend is a STUB per the pool spec: ``input_specs()``
+provides precomputed frame embeddings [B, frames, d_model] (what the two
+conv-subsampling layers would emit).  The encoder is a bidirectional
+transformer over frames + sinusoidal positions; the decoder is causal with
+cross-attention into the encoder output.
+
+Serving: ``encode`` runs once per request; the decoder's cross K/V are
+projected once from the encoder output and carried in the cache; decode
+steps then behave like a decoder-only LM.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers.attention import (
+    KVCache,
+    attn_apply,
+    attn_init,
+    chunked_attention,
+    init_kv_cache,
+)
+from repro.models.layers.mlp import mlp_apply, mlp_init
+from repro.models.layers.norm import apply_norm, norm_init
+from repro.models.layers.rope import sinusoidal_positions
+
+
+class EncDecCache(NamedTuple):
+    self_kv: KVCache          # stacked [L, ...] decoder self-attn cache
+    cross_k: jax.Array        # [L, B, T_enc, KVH, hd]
+    cross_v: jax.Array
+
+
+def _dtype_of(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def _enc_layer_init(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": norm_init(cfg.norm, cfg.d_model, cfg.norm_bias, dtype),
+        "attn": attn_init(k1, cfg, dtype),
+        "ln2": norm_init(cfg.norm, cfg.d_model, cfg.norm_bias, dtype),
+        "ffn": mlp_init(k2, cfg.d_model, cfg.d_ff, glu=cfg.glu,
+                        bias=cfg.mlp_bias, dtype=dtype),
+    }
+
+
+def _dec_layer_init(key, cfg, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": norm_init(cfg.norm, cfg.d_model, cfg.norm_bias, dtype),
+        "attn": attn_init(k1, cfg, dtype),
+        "ln_x": norm_init(cfg.norm, cfg.d_model, cfg.norm_bias, dtype),
+        "xattn": attn_init(k2, cfg, dtype, cross=True),
+        "ln2": norm_init(cfg.norm, cfg.d_model, cfg.norm_bias, dtype),
+        "ffn": mlp_init(k3, cfg.d_model, cfg.d_ff, glu=cfg.glu,
+                        bias=cfg.mlp_bias, dtype=dtype),
+    }
+
+
+class EncDecLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg.validate()
+
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        dtype = _dtype_of(cfg)
+        k_e, k_d, k_emb, k_pe = jax.random.split(key, 4)
+        enc_keys = jax.random.split(k_e, cfg.encoder_layers)
+        dec_keys = jax.random.split(k_d, cfg.num_layers)
+        return {
+            "embed": 0.02 * jax.random.normal(
+                k_emb, (cfg.vocab_size, cfg.d_model), dtype),
+            "pos_dec": 0.02 * jax.random.normal(
+                k_pe, (4096, cfg.d_model), dtype),  # learned decoder positions
+            "encoder": jax.vmap(
+                lambda k: _enc_layer_init(k, cfg, dtype))(enc_keys),
+            "enc_norm": norm_init(cfg.norm, cfg.d_model, cfg.norm_bias, dtype),
+            "decoder": jax.vmap(
+                lambda k: _dec_layer_init(k, cfg, dtype))(dec_keys),
+            "final_norm": norm_init(cfg.norm, cfg.d_model, cfg.norm_bias, dtype),
+        }
+
+    def param_specs(self, seed: int = 0):
+        return jax.eval_shape(self.init, jax.random.PRNGKey(seed))
+
+    # ---- encoder ----
+
+    def encode(self, params, frames: jax.Array) -> jax.Array:
+        """frames: [B, T_enc, D] (stub conv output) -> encoder states."""
+        cfg = self.cfg
+        t = frames.shape[1]
+        x = frames + sinusoidal_positions(t, cfg.d_model).astype(frames.dtype)
+        positions = jnp.arange(t)
+
+        def body(carry, lp):
+            xx = carry
+            h = apply_norm(cfg.norm, lp["ln1"], xx)
+            a, _ = attn_apply(cfg, lp["attn"], h, positions, causal=False)
+            xx = xx + a
+            h2 = apply_norm(cfg.norm, lp["ln2"], xx)
+            xx = xx + mlp_apply(lp["ffn"], h2, cfg.activation)
+            return xx, None
+
+        x, _ = jax.lax.scan(jax.checkpoint(body), x, params["encoder"],
+                            unroll=cfg.encoder_layers if cfg.scan_unroll else 1)
+        return apply_norm(cfg.norm, params["enc_norm"], x)
+
+    # ---- decoder ----
+
+    def _dec_positions_embed(self, params, tokens, pos0):
+        cfg = self.cfg
+        x = params["embed"][tokens]
+        idx = jnp.clip(pos0 + jnp.arange(tokens.shape[1]),
+                       0, params["pos_dec"].shape[0] - 1)
+        return x + params["pos_dec"][idx]
+
+    def decoder_states(self, params, tokens, enc_out, caches=None,
+                       mode: str = "train", pos0=0):
+        cfg = self.cfg
+        b, s = tokens.shape
+        positions = pos0 + jnp.arange(s)
+        x = self._dec_positions_embed(params, tokens, pos0)
+
+        if mode == "train":
+            h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+
+            def body(carry, lp):
+                xx = carry
+                hh = apply_norm(cfg.norm, lp["ln1"], xx)
+                a, _ = attn_apply(cfg, lp["attn"], hh, positions, causal=True)
+                xx = xx + a
+                hx = apply_norm(cfg.norm, lp["ln_x"], xx)
+                ek = (enc_out @ lp["xattn"]["wk"]).reshape(b, -1, kvh, hd)
+                ev = (enc_out @ lp["xattn"]["wv"]).reshape(b, -1, kvh, hd)
+                if "bk" in lp["xattn"]:
+                    ek = ek + lp["xattn"]["bk"].reshape(kvh, hd)
+                    ev = ev + lp["xattn"]["bv"].reshape(kvh, hd)
+                xa, _ = attn_apply(cfg, lp["xattn"], hx, positions,
+                                   cross_kv=(ek, ev))
+                xx = xx + xa
+                h2 = apply_norm(cfg.norm, lp["ln2"], xx)
+                xx = xx + mlp_apply(lp["ffn"], h2, cfg.activation)
+                return xx, None
+
+            x, _ = jax.lax.scan(jax.checkpoint(body), x, params["decoder"],
+                                unroll=cfg.num_layers if cfg.scan_unroll else 1)
+            new_cache = None
+        else:
+            def body_serve(carry, layer_in):
+                xx = carry
+                lp, lc, ck, cv = layer_in
+                hh = apply_norm(cfg.norm, lp["ln1"], xx)
+                a, nc = attn_apply(cfg, lp["attn"], hh, positions, causal=True,
+                                   cache=lc, update_cache=(mode == "prefill"))
+                xx = xx + a
+                hx = apply_norm(cfg.norm, lp["ln_x"], xx)
+                xa, _ = attn_apply(cfg, lp["xattn"], hx, positions,
+                                   cross_kv=(ck, cv))
+                xx = xx + xa
+                h2 = apply_norm(cfg.norm, lp["ln2"], xx)
+                xx = xx + mlp_apply(lp["ffn"], h2, cfg.activation)
+                return xx, nc
+
+            x, new_self = jax.lax.scan(
+                body_serve, x,
+                (params["decoder"], caches.self_kv, caches.cross_k,
+                 caches.cross_v))
+            new_cache = EncDecCache(self_kv=new_self, cross_k=caches.cross_k,
+                                    cross_v=caches.cross_v)
+        return apply_norm(cfg.norm, params["final_norm"], x), new_cache
+
+    # ---- caches / serving ----
+
+    def init_cache(self, params, frames, batch: int, max_seq: int):
+        """Run the encoder, project cross K/V once per layer, zero self KV."""
+        cfg = self.cfg
+        dtype = _dtype_of(cfg)
+        kvh, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        enc_out = self.encode(params, frames)
+        b, t, _ = enc_out.shape
+
+        def project(lp):
+            k = (enc_out @ lp["xattn"]["wk"]).reshape(b, t, kvh, hd)
+            v = (enc_out @ lp["xattn"]["wv"]).reshape(b, t, kvh, hd)
+            if "bk" in lp["xattn"]:
+                k = k + lp["xattn"]["bk"].reshape(kvh, hd)
+                v = v + lp["xattn"]["bv"].reshape(kvh, hd)
+            return k, v
+
+        ck, cv = jax.vmap(project)(params["decoder"])
+        self_kv = jax.vmap(
+            lambda _: init_kv_cache(batch, max_seq, kvh, hd, dtype)
+        )(jnp.arange(cfg.num_layers))
+        return EncDecCache(self_kv=self_kv, cross_k=ck, cross_v=cv)
+
+    def loss(self, params, batch: dict, seq_chunk: int = 512):
+        """batch: {"frames": [B,T,D], "tokens": [B,S], "labels": [B,S]}."""
+        from repro.models.transformer import _chunked_ce
+
+        enc_out = self.encode(params, batch["frames"])
+        h, _ = self.decoder_states(params, batch["tokens"], enc_out,
+                                   mode="train")
+        mask = batch.get("mask")
+        if mask is None:
+            mask = jnp.ones_like(batch["labels"], jnp.float32)
+        ce, denom = _chunked_ce(h, params["embed"].T, batch["labels"], mask,
+                                seq_chunk)
+        loss = ce / jnp.maximum(denom, 1.0)
+        return loss, {"ce": loss}
+
+    def prefill(self, params, tokens, caches):
+        h, caches = self.decoder_states(params, tokens, None, caches,
+                                        mode="prefill", pos0=0)
+        return h[:, -1:, :] @ params["embed"].T, caches
+
+    def decode_step(self, params, caches, tokens, pos):
+        h, caches = self.decoder_states(params, tokens, None, caches,
+                                        mode="decode", pos0=pos)
+        return h @ params["embed"].T, caches

@@ -1,0 +1,155 @@
+"""Multi-head Latent Attention (deepseek-v2/v3).
+
+Faithful structure per arXiv:2412.19437:
+
+  q:  x -> W_dq [d, q_lora] -> rmsnorm -> W_uq [q_lora, H*(nope+rope)]
+  kv: x -> W_dkv [d, kv_lora]  (cached!)  -> rmsnorm
+          -> W_uk [kv_lora, H*nope], W_uv [kv_lora, H*v_dim]
+  k_rope: x -> W_kr [d, rope]   (single shared rope head, cached)
+
+Prefill computes full k/v (direct form).  Decode uses the *absorbed* form:
+q_nope is pre-multiplied by W_uk so attention scores contract against the
+cached latent c_kv directly, and the attention output in latent space is
+post-multiplied by W_uv — per-token cache is kv_lora + rope dims
+(512 + 64 = 576 for the 671b config), MLA's entire memory advantage, and why
+the decode_32k dry-run cell for this arch has a tiny KV-cache footprint.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLAConfig
+from repro.models.layers.norm import apply_norm, rmsnorm_init
+from repro.models.layers.rope import apply_rope
+
+
+class MLACache(NamedTuple):
+    c_kv: jax.Array    # [B, S_buf, kv_lora]
+    k_rope: jax.Array  # [B, S_buf, rope_dim]
+    length: jax.Array  # [] int32
+
+
+def init_mla_cache(batch: int, buf_len: int, cfg: MLAConfig,
+                   dtype=jnp.bfloat16) -> MLACache:
+    return MLACache(
+        c_kv=jnp.zeros((batch, buf_len, cfg.kv_lora_rank), dtype),
+        k_rope=jnp.zeros((batch, buf_len, cfg.qk_rope_head_dim), dtype),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def mla_init(key, d_model: int, num_heads: int, cfg: MLAConfig,
+             dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 7)
+    init = lambda k, fi, fo: jax.random.normal(k, (fi, fo), dtype) * (fi ** -0.5)
+    h = num_heads
+    qd = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+    return {
+        "w_dq": init(ks[0], d_model, cfg.q_lora_rank),
+        "q_norm": rmsnorm_init(cfg.q_lora_rank, dtype),
+        "w_uq": init(ks[1], cfg.q_lora_rank, h * qd),
+        "w_dkv": init(ks[2], d_model, cfg.kv_lora_rank),
+        "kv_norm": rmsnorm_init(cfg.kv_lora_rank, dtype),
+        "w_uk": init(ks[3], cfg.kv_lora_rank, h * cfg.qk_nope_head_dim),
+        "w_uv": init(ks[4], cfg.kv_lora_rank, h * cfg.v_head_dim),
+        "w_kr": init(ks[5], d_model, cfg.qk_rope_head_dim),
+        "w_o": init(ks[6], h * cfg.v_head_dim, d_model),
+    }
+
+
+def _project_q(p, x, num_heads, cfg, positions, rope_theta):
+    b, s, _ = x.shape
+    cq = apply_norm("rmsnorm", p["q_norm"], x @ p["w_dq"])
+    q = (cq @ p["w_uq"]).reshape(b, s, num_heads,
+                                 cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
+    q_nope = q[..., :cfg.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., cfg.qk_nope_head_dim:], positions, rope_theta, 1.0)
+    return q_nope, q_rope
+
+
+def mla_prefill(p, x, num_heads, cfg: MLAConfig, positions, rope_theta,
+                cache: Optional[MLACache] = None, chunk_size: int = 1024):
+    """Direct-form MLA over a full sequence; optionally fills the cache.
+
+    Returns (out [B,S,D], new_cache).
+    """
+    from repro.models.layers.attention import chunked_attention
+
+    b, s, _ = x.shape
+    q_nope, q_rope = _project_q(p, x, num_heads, cfg, positions, rope_theta)
+
+    c_kv = apply_norm("rmsnorm", p["kv_norm"], x @ p["w_dkv"])      # [B,S,r]
+    k_nope = (c_kv @ p["w_uk"]).reshape(b, s, num_heads, cfg.qk_nope_head_dim)
+    v = (c_kv @ p["w_uv"]).reshape(b, s, num_heads, cfg.v_head_dim)
+    k_rope = apply_rope((x @ p["w_kr"])[:, :, None, :], positions,
+                        rope_theta, 1.0)                            # [B,S,1,rope]
+    k_rope_b = jnp.broadcast_to(
+        k_rope, (b, s, num_heads, cfg.qk_rope_head_dim))
+
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+    # Pad v to q/k head dim so one attention call computes the context, then
+    # slice back (keeps chunked_attention generic).
+    qk_dim = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+    v_pad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, qk_dim - cfg.v_head_dim)))
+    out = chunked_attention(q, k, v_pad, causal=True,
+                            q_offset=positions[0], k_offset=positions[0],
+                            chunk_size=chunk_size)
+    out = out[..., :cfg.v_head_dim].reshape(b, s, num_heads * cfg.v_head_dim)
+
+    new_cache = None
+    if cache is not None:
+        idx = (cache.length + jnp.arange(s)) % cache.c_kv.shape[1]
+        new_cache = MLACache(
+            c_kv=cache.c_kv.at[:, idx].set(c_kv.astype(cache.c_kv.dtype)),
+            k_rope=cache.k_rope.at[:, idx].set(
+                k_rope[:, :, 0, :].astype(cache.k_rope.dtype)),
+            length=cache.length + s,
+        )
+    return out @ p["w_o"], new_cache
+
+
+def mla_decode(p, x, num_heads, cfg: MLAConfig, positions, rope_theta,
+               cache: MLACache):
+    """Absorbed-form single/few-token decode against the latent cache."""
+    b, s, _ = x.shape
+    h = num_heads
+    q_nope, q_rope = _project_q(p, x, num_heads, cfg, positions, rope_theta)
+
+    c_kv_new = apply_norm("rmsnorm", p["kv_norm"], x @ p["w_dkv"])
+    k_rope_new = apply_rope((x @ p["w_kr"])[:, :, None, :], positions,
+                            rope_theta, 1.0)[:, :, 0, :]
+    buf = cache.c_kv.shape[1]
+    idx = (cache.length + jnp.arange(s)) % buf
+    c_buf = cache.c_kv.at[:, idx].set(c_kv_new.astype(cache.c_kv.dtype))
+    r_buf = cache.k_rope.at[:, idx].set(k_rope_new.astype(cache.k_rope.dtype))
+    new_len = cache.length + s
+    new_cache = MLACache(c_kv=c_buf, k_rope=r_buf, length=new_len)
+
+    # Absorb W_uk into q:  q_lat[b,s,h,r] = q_nope . W_uk(per-head)
+    w_uk = p["w_uk"].reshape(cfg.kv_lora_rank, h, cfg.qk_nope_head_dim)
+    q_lat = jnp.einsum("bshd,rhd->bshr", q_nope, w_uk)
+    scale = (cfg.qk_nope_head_dim + cfg.qk_rope_head_dim) ** -0.5
+    scores = (
+        jnp.einsum("bshr,bcr->bshc", q_lat.astype(jnp.float32),
+                   c_buf.astype(jnp.float32))
+        + jnp.einsum("bshd,bcd->bshc", q_rope.astype(jnp.float32),
+                     r_buf.astype(jnp.float32))
+    ) * scale                                               # [B,S,H,C]
+
+    slot = jnp.arange(buf)
+    k_pos = jnp.where(slot < new_len, slot, -1)             # full buffer: 1:1
+    mask = (k_pos[None, :] >= 0) & (k_pos[None, :] <= positions[:, None])
+    scores = jnp.where(mask[None, :, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+
+    ctx_lat = jnp.einsum("bshc,bcr->bshr", probs,
+                         c_buf.astype(jnp.float32))         # [B,S,H,r]
+    w_uv = p["w_uv"].reshape(cfg.kv_lora_rank, h, cfg.v_head_dim)
+    out = jnp.einsum("bshr,rhd->bshd", ctx_lat.astype(x.dtype), w_uv)
+    out = out.reshape(b, s, h * cfg.v_head_dim)
+    return out @ p["w_o"], new_cache

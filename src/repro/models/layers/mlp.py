@@ -1,0 +1,37 @@
+"""Feed-forward blocks: SwiGLU (gated) and plain 2-matrix MLPs."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _act(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+def mlp_init(key, d_model: int, d_ff: int, *, glu: bool, bias: bool,
+             dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 3)
+    init = lambda k, fi, fo: jax.random.normal(k, (fi, fo), dtype) * (fi ** -0.5)
+    p = {"w_up": init(ks[0], d_model, d_ff), "w_down": init(ks[1], d_ff, d_model)}
+    if glu:
+        p["w_gate"] = init(ks[2], d_model, d_ff)
+    if bias:
+        p["b_up"] = jnp.zeros((d_ff,), dtype)
+        p["b_down"] = jnp.zeros((d_model,), dtype)
+    return p
+
+
+def mlp_apply(p: dict, x: jax.Array, activation: str = "silu") -> jax.Array:
+    up = x @ p["w_up"]
+    if "b_up" in p:
+        up = up + p["b_up"]
+    if "w_gate" in p:
+        up = _act(activation)(x @ p["w_gate"]) * up
+    else:
+        up = _act(activation)(up)
+    out = up @ p["w_down"]
+    if "b_down" in p:
+        out = out + p["b_down"]
+    return out

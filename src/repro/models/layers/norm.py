@@ -1,0 +1,49 @@
+"""Normalization layers (functional; params are dicts of arrays)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def layernorm_init(d: int, bias: bool = True, dtype=jnp.float32) -> dict:
+    p = {"scale": jnp.ones((d,), dtype)}
+    if bias:
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def norm_init(kind: str, d: int, bias: bool = False, dtype=jnp.float32) -> dict:
+    if kind == "rmsnorm":
+        return rmsnorm_init(d, dtype)
+    if kind == "layernorm":
+        return layernorm_init(d, bias, dtype)
+    raise ValueError(f"unknown norm '{kind}'")
+
+
+def apply_norm(kind: str, p: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+        y = x32 * jax.lax.rsqrt(var + eps)
+    elif kind == "layernorm":
+        mu = jnp.mean(x32, axis=-1, keepdims=True)
+        var = jnp.var(x32, axis=-1, keepdims=True)
+        y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    else:
+        raise ValueError(f"unknown norm '{kind}'")
+    y = y * p["scale"].astype(jnp.float32)
+    if "bias" in p:
+        y = y + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def head_rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """Per-head qk-norm (chameleon): normalize over the head dim."""
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)

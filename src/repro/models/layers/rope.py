@@ -1,0 +1,53 @@
+"""Rotary position embeddings, including partial-rotary variants.
+
+``rope_fraction`` controls the rotated share of each head:
+  1.0  — full RoPE (llama/mistral lineage)
+  0.5  — chatglm's "2d-RoPE" (rotate the first half, pass the rest through)
+  0.25 — stablelm partial rotary
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_angles(positions: jax.Array, rot_dim: int, theta: float) -> tuple:
+    """(sin, cos) of shape [..., rot_dim/2] for integer positions [...]."""
+    half = rot_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # [..., half]
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(
+    x: jax.Array,             # [..., seq, heads, head_dim]
+    positions: jax.Array,     # [..., seq]
+    theta: float,
+    fraction: float = 1.0,
+) -> jax.Array:
+    """Rotate the leading ``fraction`` of each head's dims; pass the rest."""
+    if theta <= 0.0 or fraction <= 0.0:
+        return x
+    head_dim = x.shape[-1]
+    rot = int(head_dim * fraction)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    sin, cos = rope_angles(positions, rot, theta)          # [..., seq, rot/2]
+    sin = sin[..., None, :]                                # broadcast heads
+    cos = cos[..., None, :]
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., : rot // 2], xr[..., rot // 2:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1.astype(x.dtype), y2.astype(x.dtype), xp], axis=-1)
+
+
+def sinusoidal_positions(max_len: int, d_model: int) -> jax.Array:
+    """Whisper-style fixed sinusoidal position table [max_len, d_model]."""
+    pos = jnp.arange(max_len, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d_model // 2, dtype=jnp.float32)[None, :]
+    inv = jnp.exp(-jnp.log(10000.0) * dim / (d_model // 2))
+    ang = pos * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)

@@ -1,0 +1,153 @@
+"""RWKV-6 ("Finch") blocks: time-mix with data-dependent decay + channel-mix.
+
+Faithful structure per arXiv:2404.05892:
+
+* token shift   — per-channel lerp between x_t and x_{t-1}; the receptance/
+                  key/value/gate mixes are learned constants, the decay mix
+                  is data-dependent through a LoRA (the Finch contribution).
+* decay         — w_t = exp(-exp(w_base + lora(x)));  per-channel, per-step.
+* WKV recurrence (multi-head, head_dim x head_dim state S):
+      y_t = r_t . (S_{t-1} + (u ⊙ k_t) v_t^T)
+      S_t = diag(w_t) S_{t-1} + k_t v_t^T
+* head group-norm, SiLU gate, output projection.
+* channel-mix   — token shift, k = relu(W_k x)^2, out = sigmoid(W_r x) ⊙ W_v k.
+
+The recurrence runs as an exact fp32 ``lax.scan`` over time (state is O(1)
+in sequence length — the whole point of the architecture and of its
+long_500k dry-run cell).  A chunked-parallel form is a recorded perf-
+iteration candidate (EXPERIMENTS.md §Perf); correctness comes first here and
+the decode path is already optimal (one step, no scan).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RWKVConfig
+
+
+class RWKVCache(NamedTuple):
+    wkv_state: jax.Array   # [B, H, hd, hd] fp32
+    tm_last: jax.Array     # [B, D] last token seen by time-mix
+    cm_last: jax.Array     # [B, D] last token seen by channel-mix
+    length: jax.Array
+
+
+def init_rwkv_cache(batch: int, d_model: int, cfg: RWKVConfig,
+                    dtype=jnp.float32) -> RWKVCache:
+    heads = d_model // cfg.head_dim
+    return RWKVCache(
+        wkv_state=jnp.zeros((batch, heads, cfg.head_dim, cfg.head_dim), jnp.float32),
+        tm_last=jnp.zeros((batch, d_model), dtype),
+        cm_last=jnp.zeros((batch, d_model), dtype),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def rwkv_time_mix_init(key, d_model: int, cfg: RWKVConfig, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 9)
+    init = lambda k, fi, fo: jax.random.normal(k, (fi, fo), dtype) * (fi ** -0.5)
+    heads = d_model // cfg.head_dim
+    return {
+        "mix_r": jnp.full((d_model,), 0.5, dtype),
+        "mix_k": jnp.full((d_model,), 0.5, dtype),
+        "mix_v": jnp.full((d_model,), 0.5, dtype),
+        "mix_g": jnp.full((d_model,), 0.5, dtype),
+        "mix_w": jnp.full((d_model,), 0.5, dtype),
+        "w_r": init(ks[0], d_model, d_model),
+        "w_k": init(ks[1], d_model, d_model),
+        "w_v": init(ks[2], d_model, d_model),
+        "w_g": init(ks[3], d_model, d_model),
+        "w_o": init(ks[4], d_model, d_model),
+        # data-dependent decay LoRA: w_t = exp(-exp(w0 + tanh(x A) B))
+        "decay_a": init(ks[5], d_model, cfg.decay_lora),
+        "decay_b": init(ks[6], cfg.decay_lora, d_model) * 0.1,
+        "decay_base": jnp.full((d_model,), -5.0, jnp.float32),
+        "bonus_u": 0.1 * jax.random.normal(ks[7], (heads, cfg.head_dim), jnp.float32),
+        "gn_scale": jnp.ones((d_model,), dtype),
+    }
+
+
+def rwkv_channel_mix_init(key, d_model: int, d_ff: int, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 3)
+    init = lambda k, fi, fo: jax.random.normal(k, (fi, fo), dtype) * (fi ** -0.5)
+    return {
+        "mix_r": jnp.full((d_model,), 0.5, dtype),
+        "mix_k": jnp.full((d_model,), 0.5, dtype),
+        "w_r": init(ks[0], d_model, d_model),
+        "w_k": init(ks[1], d_model, d_ff),
+        "w_v": init(ks[2], d_ff, d_model),
+    }
+
+
+def _token_shift(x: jax.Array, last: jax.Array) -> jax.Array:
+    """shift(x)_t = x_{t-1}, with ``last`` filling t=0.  x: [B,S,D]."""
+    return jnp.concatenate([last[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def rwkv_time_mix(p: dict, x: jax.Array, cfg: RWKVConfig,
+                  cache: Optional[RWKVCache] = None):
+    """Returns (y [B,S,D], (new_state, new_last))."""
+    b, s, d = x.shape
+    heads = d // cfg.head_dim
+    hd = cfg.head_dim
+
+    last = cache.tm_last if cache is not None else jnp.zeros((b, d), x.dtype)
+    xs = _token_shift(x, last)
+
+    mix = lambda m: x + (xs - x) * m
+    xr, xk, xv, xg, xw = (mix(p["mix_r"]), mix(p["mix_k"]), mix(p["mix_v"]),
+                          mix(p["mix_g"]), mix(p["mix_w"]))
+
+    r = (xr @ p["w_r"]).reshape(b, s, heads, hd).astype(jnp.float32)
+    k = (xk @ p["w_k"]).reshape(b, s, heads, hd).astype(jnp.float32)
+    v = (xv @ p["w_v"]).reshape(b, s, heads, hd).astype(jnp.float32)
+    g = jax.nn.silu(xg @ p["w_g"])
+
+    # Data-dependent decay (Finch): per-channel, per-step.
+    dd = jnp.tanh(xw @ p["decay_a"]) @ p["decay_b"]
+    logw = -jnp.exp(p["decay_base"] + dd.astype(jnp.float32))   # [B,S,D] (<0)
+    w = jnp.exp(logw).reshape(b, s, heads, hd)                  # decay in (0,1)
+
+    u = p["bonus_u"]                                            # [H, hd]
+
+    state0 = (cache.wkv_state if cache is not None
+              else jnp.zeros((b, heads, hd, hd), jnp.float32))
+
+    def step(state, inp):
+        r_t, k_t, v_t, w_t = inp                                # [B,H,hd] each
+        kv = k_t[..., :, None] * v_t[..., None, :]              # [B,H,hd,hd]
+        y_t = jnp.einsum("bhk,bhkv->bhv", r_t,
+                         state + u[None, :, :, None] * kv)
+        state = w_t[..., :, None] * state + kv
+        return state, y_t
+
+    seq = (r.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+           v.transpose(1, 0, 2, 3), w.transpose(1, 0, 2, 3))
+    state, ys = jax.lax.scan(step, state0, seq)
+    y = ys.transpose(1, 0, 2, 3).reshape(b, s, d)               # fp32
+
+    # Per-head group norm.
+    yh = y.reshape(b, s, heads, hd)
+    mu = yh.mean(-1, keepdims=True)
+    var = yh.var(-1, keepdims=True)
+    y = ((yh - mu) * jax.lax.rsqrt(var + 1e-5)).reshape(b, s, d)
+    y = (y * p["gn_scale"].astype(jnp.float32)).astype(x.dtype)
+
+    out = (y * g) @ p["w_o"]
+    return out, (state, x[:, -1, :])
+
+
+def rwkv_channel_mix(p: dict, x: jax.Array,
+                     last: Optional[jax.Array] = None):
+    b, s, d = x.shape
+    if last is None:
+        last = jnp.zeros((b, d), x.dtype)
+    xs = _token_shift(x, last)
+    xr = x + (xs - x) * p["mix_r"]
+    xk = x + (xs - x) * p["mix_k"]
+    k = jnp.square(jax.nn.relu(xk @ p["w_k"]))
+    return jax.nn.sigmoid(xr @ p["w_r"]) * (k @ p["w_v"]), x[:, -1, :]

@@ -1,0 +1,158 @@
+"""Selective SSM (Mamba-style) head block — used by hymba's parallel branch.
+
+Implements the selective state-space recurrence with input-dependent
+(Delta, B, C):
+
+    h_t = exp(Delta_t * A) * h_{t-1} + Delta_t * B_t * x_t
+    y_t = C_t . h_t + D * x_t
+
+with A diagonal (negative), a depthwise causal conv front-end, and SiLU
+gating, following Mamba.  Sequence processing uses a chunked
+``lax.scan``-of-parallel-prefix: within a chunk the recurrence is computed
+with an associative scan over the time axis (O(log C) depth); chunks carry
+the state — so prefill is fast and decode is O(1) per token.
+
+State cache per layer: (conv tail [B, W-1, d_inner], ssm state
+[B, d_inner, N]) — constant in sequence length, which is what makes the
+long_500k dry-run cell runnable for the hybrid arch.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+
+
+class SSMCache(NamedTuple):
+    conv: jax.Array    # [B, W-1, d_inner] last conv-window inputs
+    state: jax.Array   # [B, d_inner, N] ssm state
+    length: jax.Array  # [] int32
+
+
+def ssm_init(key, d_model: int, cfg: SSMConfig, dtype=jnp.float32) -> dict:
+    d_inner = cfg.expand * d_model
+    dt_rank = cfg.dt_rank or max(d_model // 16, 1)
+    ks = jax.random.split(key, 7)
+    init = lambda k, shape, fan: jax.random.normal(k, shape, dtype) * (fan ** -0.5)
+    # S4D-real initialization for A.
+    a = jnp.tile(jnp.arange(1, cfg.state_dim + 1, dtype=jnp.float32)[None, :],
+                 (d_inner, 1))
+    return {
+        "w_in": init(ks[0], (d_model, 2 * d_inner), d_model),   # x and gate z
+        "conv_w": init(ks[1], (cfg.conv_width, d_inner), cfg.conv_width),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "w_x_dbc": init(ks[2], (d_inner, dt_rank + 2 * cfg.state_dim), d_inner),
+        "w_dt": init(ks[3], (dt_rank, d_inner), dt_rank),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((d_inner,), 0.01, jnp.float32))),
+        "a_log": jnp.log(a),
+        "d_skip": jnp.ones((d_inner,), jnp.float32),
+        "w_out": init(ks[4], (d_inner, d_model), d_inner),
+    }
+
+
+def init_ssm_cache(batch: int, d_model: int, cfg: SSMConfig,
+                   dtype=jnp.float32) -> SSMCache:
+    d_inner = cfg.expand * d_model
+    return SSMCache(
+        conv=jnp.zeros((batch, cfg.conv_width - 1, d_inner), dtype),
+        state=jnp.zeros((batch, d_inner, cfg.state_dim), dtype),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def _causal_conv(x, conv_tail, w, bias):
+    """Depthwise causal conv along time.  x: [B,S,Di]; tail: [B,W-1,Di]."""
+    width = w.shape[0]
+    xx = jnp.concatenate([conv_tail, x], axis=1)           # [B, S+W-1, Di]
+    out = sum(
+        xx[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(width)
+    )
+    new_tail = xx[:, -(width - 1):, :] if width > 1 else conv_tail
+    return out + bias, new_tail
+
+
+def _selective_scan_chunk(state, dt, a, bx, c):
+    """One chunk of the selective recurrence via associative scan.
+
+    state: [B, Di, N]; dt: [B, C, Di]; a: [Di, N];
+    bx: [B, C, Di, N] (Delta*B*x); c: [B, C, N].
+    Returns (y [B, C, Di], new_state).
+    """
+    decay = jnp.exp(dt[..., None] * (-jnp.exp(a))[None, None, :, :])  # [B,C,Di,N]
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, b2 + a2 * b1
+
+    acc_decay, acc_b = jax.lax.associative_scan(combine, (decay, bx), axis=1)
+    h = acc_decay * state[:, None] + acc_b                  # [B,C,Di,N]
+    y = jnp.einsum("bcdn,bcn->bcd", h, c)
+    return y, h[:, -1]
+
+
+def ssm_apply(
+    p: dict,
+    x: jax.Array,             # [B, S, D]
+    cfg: SSMConfig,
+    cache: Optional[SSMCache] = None,
+    chunk_size: int = 256,
+):
+    """Returns (y [B,S,D], new_cache_or_None)."""
+    b, s, d = x.shape
+    d_inner = cfg.expand * d
+    dt_rank = p["w_dt"].shape[0]
+
+    xz = x @ p["w_in"]
+    xs, z = xz[..., :d_inner], xz[..., d_inner:]
+
+    tail = cache.conv if cache is not None else jnp.zeros(
+        (b, p["conv_w"].shape[0] - 1, d_inner), xs.dtype)
+    xs, new_tail = _causal_conv(xs, tail, p["conv_w"], p["conv_b"])
+    xs = jax.nn.silu(xs)
+
+    dbc = xs @ p["w_x_dbc"]
+    dt = jax.nn.softplus(
+        dbc[..., :dt_rank] @ p["w_dt"] + p["dt_bias"]
+    ).astype(jnp.float32)                                   # [B,S,Di]
+    bmat = dbc[..., dt_rank:dt_rank + cfg.state_dim].astype(jnp.float32)
+    cmat = dbc[..., dt_rank + cfg.state_dim:].astype(jnp.float32)
+
+    bx = (dt * xs.astype(jnp.float32))[..., None] * bmat[:, :, None, :]  # [B,S,Di,N]
+
+    state = (cache.state.astype(jnp.float32) if cache is not None
+             else jnp.zeros((b, d_inner, cfg.state_dim), jnp.float32))
+
+    chunk = min(chunk_size, s)
+    if s % chunk:
+        # Pad time to a chunk multiple (padded steps have dt=0 -> identity).
+        pad = chunk - s % chunk
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bx = jnp.pad(bx, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+    n_chunks = dt.shape[1] // chunk
+
+    def step(st, inp):
+        dt_c, bx_c, c_c = inp
+        y_c, st_new = _selective_scan_chunk(st, dt_c, p["a_log"], bx_c, c_c)
+        return st_new, y_c
+
+    dt_c = dt.reshape(b, n_chunks, chunk, d_inner).transpose(1, 0, 2, 3)
+    bx_c = bx.reshape(b, n_chunks, chunk, d_inner, cfg.state_dim).transpose(1, 0, 2, 3, 4)
+    c_c = cmat.reshape(b, n_chunks, chunk, cfg.state_dim).transpose(1, 0, 2, 3)
+    state, ys = jax.lax.scan(step, state, (dt_c, bx_c, c_c))
+    y = ys.transpose(1, 0, 2, 3).reshape(b, -1, d_inner)[:, :s]
+
+    y = y + xs.astype(jnp.float32) * p["d_skip"][None, None, :]
+    y = (y.astype(x.dtype) * jax.nn.silu(z)) @ p["w_out"]
+
+    new_cache = None
+    if cache is not None:
+        new_cache = SSMCache(conv=new_tail.astype(cache.conv.dtype),
+                             state=state.astype(cache.state.dtype),
+                             length=cache.length + s)
+    return y, new_cache

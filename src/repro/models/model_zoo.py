@@ -1,0 +1,13 @@
+"""build_model(config) — the single entry point for every pool architecture."""
+
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+from repro.models.encdec import EncDecLM
+from repro.models.transformer import DecoderLM
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.encoder_layers > 0:
+        return EncDecLM(cfg)
+    return DecoderLM(cfg)

@@ -1,0 +1,407 @@
+"""Unified decoder LM assembled from a ModelConfig.
+
+Handles every pool family except whisper (see encdec.py):
+  dense (mistral/stablelm/command-r/chatglm/chameleon), moe (mixtral,
+  deepseek incl. MLA + dense-prefix + MTP), hybrid (hymba: parallel
+  attn+SSM with mixed global/local windows), ssm (rwkv6).
+
+Structure
+---------
+Layers are grouped into *segments*: maximal runs of layers with identical
+parameter structure AND cache shape (ffn kind, d_ff, attention window
+class).  Each segment scans over its stacked per-layer parameters
+(``jax.lax.scan``) so the HLO contains one body per segment regardless of
+depth — essential for 88-layer configs on a 512-way mesh.  deepseek-v3 gets
+[dense x3, moe x58]; hymba gets [global, local x14, global, local x15,
+global]; uniform models get a single segment.
+
+Memory discipline: training wraps each segment body in ``jax.checkpoint``
+(remat), attention is chunked/online-softmax (see layers/attention.py), and
+the LM loss is computed in sequence chunks so [B, S, V] logits are never
+materialized.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.utils import cdiv
+from repro.configs.base import ModelConfig
+from repro.distributed.context import constrain_residual
+from repro.models.layers.attention import (
+    KVCache,
+    attn_apply,
+    attn_init,
+    init_kv_cache,
+)
+from repro.models.layers.mla import (
+    MLACache,
+    init_mla_cache,
+    mla_decode,
+    mla_init,
+    mla_prefill,
+)
+from repro.models.layers.mlp import mlp_apply, mlp_init
+from repro.models.layers.moe import moe_apply, moe_init
+from repro.models.layers.norm import apply_norm, norm_init
+from repro.models.layers.rwkv import (
+    RWKVCache,
+    init_rwkv_cache,
+    rwkv_channel_mix,
+    rwkv_channel_mix_init,
+    rwkv_time_mix,
+    rwkv_time_mix_init,
+)
+from repro.models.layers.ssm import SSMCache, init_ssm_cache, ssm_apply, ssm_init
+
+GLOBAL_WINDOW = 0  # window=0 means full attention
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    count: int
+    window: int           # 0 = global; >0 = sliding window (uniform in seg)
+    ffn: str              # "mlp" | "moe"
+    d_ff: int
+
+
+def plan_segments(cfg: ModelConfig) -> tuple[Segment, ...]:
+    segs: list[Segment] = []
+    for i in range(cfg.num_layers):
+        if cfg.moe and i >= cfg.moe.first_dense_layers:
+            ffn, d_ff = "moe", cfg.moe.d_ff_expert
+        elif cfg.moe:
+            ffn, d_ff = "mlp", (cfg.moe.dense_d_ff or cfg.d_ff)
+        else:
+            ffn, d_ff = "mlp", cfg.d_ff
+        if cfg.sliding_window and i not in cfg.global_layer_indices:
+            window = cfg.sliding_window
+        else:
+            window = GLOBAL_WINDOW
+        if segs and (segs[-1].window == window and segs[-1].ffn == ffn
+                     and segs[-1].d_ff == d_ff):
+            segs[-1] = dataclasses.replace(segs[-1], count=segs[-1].count + 1)
+        else:
+            segs.append(Segment(1, window, ffn, d_ff))
+    return tuple(segs)
+
+
+# ---------------------------------------------------------------------------
+# One decoder layer.
+# ---------------------------------------------------------------------------
+
+
+def _dtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def layer_init(key, cfg: ModelConfig, seg: Segment) -> dict:
+    dtype = _dtype_of(cfg)
+    ks = jax.random.split(key, 6)
+    p: dict = {"ln1": norm_init(cfg.norm, cfg.d_model, cfg.norm_bias, dtype)}
+    if cfg.rwkv is not None:
+        p["tm"] = rwkv_time_mix_init(ks[0], cfg.d_model, cfg.rwkv, dtype)
+        p["ln2"] = norm_init(cfg.norm, cfg.d_model, cfg.norm_bias, dtype)
+        p["cm"] = rwkv_channel_mix_init(ks[1], cfg.d_model, cfg.d_ff, dtype)
+        return p
+    if cfg.mla is not None:
+        p["mla"] = mla_init(ks[0], cfg.d_model, cfg.num_heads, cfg.mla, dtype)
+    else:
+        p["attn"] = attn_init(ks[0], cfg, dtype)
+    if cfg.ssm is not None:  # hymba parallel branch
+        p["ssm"] = ssm_init(ks[1], cfg.d_model, cfg.ssm, dtype)
+        p["ln_attn_out"] = norm_init("rmsnorm", cfg.d_model, False, dtype)
+        p["ln_ssm_out"] = norm_init("rmsnorm", cfg.d_model, False, dtype)
+    if not cfg.parallel_block:
+        p["ln2"] = norm_init(cfg.norm, cfg.d_model, cfg.norm_bias, dtype)
+    if seg.ffn == "moe":
+        p["moe"] = moe_init(ks[2], cfg.d_model, cfg.moe, dtype)
+    else:
+        p["ffn"] = mlp_init(ks[2], cfg.d_model, seg.d_ff, glu=cfg.glu,
+                            bias=cfg.mlp_bias, dtype=dtype)
+    return p
+
+
+def layer_cache_init(cfg: ModelConfig, seg: Segment, batch: int,
+                     max_seq: int) -> Any:
+    """Zero cache for one layer of this segment (None for train mode)."""
+    dtype = _dtype_of(cfg)
+    if cfg.rwkv is not None:
+        return init_rwkv_cache(batch, cfg.d_model, cfg.rwkv, dtype)
+    buf = max_seq if seg.window == GLOBAL_WINDOW else min(seg.window, max_seq)
+    if cfg.mla is not None:
+        cache = init_mla_cache(batch, buf, cfg.mla, dtype)
+    else:
+        kv_dtype = jnp.dtype(cfg.kv_cache_dtype) if cfg.kv_cache_dtype else dtype
+        cache = init_kv_cache(batch, buf, cfg.num_kv_heads,
+                              cfg.resolved_head_dim, kv_dtype)
+    if cfg.ssm is not None:
+        return (cache, init_ssm_cache(batch, cfg.d_model, cfg.ssm, dtype))
+    return cache
+
+
+def layer_apply(cfg: ModelConfig, seg: Segment, p: dict, x: jax.Array,
+                positions: jax.Array, cache: Any, mode: str):
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+
+    if cfg.rwkv is not None:
+        h, (wkv_state, tm_last) = rwkv_time_mix(
+            p["tm"], apply_norm(cfg.norm, p["ln1"], x), cfg.rwkv,
+            cache if mode != "train" else None)
+        x = x + h
+        cm_last_in = cache.cm_last if mode != "train" else None
+        h2, cm_last = rwkv_channel_mix(
+            p["cm"], apply_norm(cfg.norm, p["ln2"], x), cm_last_in)
+        x = x + h2
+        new_cache = None
+        if mode != "train":
+            new_cache = RWKVCache(wkv_state=wkv_state, tm_last=tm_last,
+                                  cm_last=cm_last,
+                                  length=cache.length + x.shape[1])
+        return x, new_cache, aux
+
+    h = apply_norm(cfg.norm, p["ln1"], x)
+
+    attn_cache = cache[0] if (cfg.ssm is not None and cache is not None) else cache
+    if cfg.mla is not None:
+        if mode == "decode":
+            attn_out, new_attn_cache = mla_decode(
+                p["mla"], h, cfg.num_heads, cfg.mla, positions, cfg.rope_theta,
+                attn_cache)
+        else:
+            attn_out, new_attn_cache = mla_prefill(
+                p["mla"], h, cfg.num_heads, cfg.mla, positions, cfg.rope_theta,
+                cache=attn_cache if mode == "prefill" else None)
+    else:
+        attn_out, new_attn_cache = attn_apply(
+            cfg, p["attn"], h, positions,
+            window=seg.window, causal=True,
+            cache=attn_cache if mode != "train" else None,
+            update_cache=(mode == "prefill"),
+        )
+
+    new_cache: Any = new_attn_cache
+    if cfg.ssm is not None:
+        ssm_cache = cache[1] if cache is not None else None
+        ssm_out, new_ssm_cache = ssm_apply(
+            p["ssm"], h, cfg.ssm, ssm_cache if mode != "train" else None)
+        fused = 0.5 * (apply_norm("rmsnorm", p["ln_attn_out"], attn_out)
+                       + apply_norm("rmsnorm", p["ln_ssm_out"], ssm_out))
+        attn_out = fused
+        if mode != "train":
+            new_cache = (new_attn_cache, new_ssm_cache)
+
+    if cfg.parallel_block:
+        ffn_out, aux = _apply_ffn(cfg, seg, p, h)
+        x = x + attn_out + ffn_out
+    else:
+        x = x + attn_out
+        h2 = apply_norm(cfg.norm, p["ln2"], x)
+        ffn_out, aux = _apply_ffn(cfg, seg, p, h2)
+        x = x + ffn_out
+    return x, new_cache, aux
+
+
+def _apply_ffn(cfg, seg, p, h):
+    if seg.ffn == "moe":
+        out, aux = moe_apply(p["moe"], h, cfg.moe)
+        return out, aux
+    return mlp_apply(p["ffn"], h, cfg.activation), jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Whole model.
+# ---------------------------------------------------------------------------
+
+
+class DecoderLM:
+    """Config-built decoder-only LM with train / prefill / decode entries."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg.validate()
+        self.segments = plan_segments(cfg)
+
+    # ---- parameters ----
+
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        dtype = _dtype_of(cfg)
+        keys = jax.random.split(key, len(self.segments) + 3)
+        params: dict = {
+            "embed": 0.02 * jax.random.normal(
+                keys[0], (cfg.vocab_size, cfg.d_model), dtype),
+            "final_norm": norm_init(cfg.norm, cfg.d_model, cfg.norm_bias, dtype),
+        }
+        if not cfg.tie_embeddings:
+            params["unembed"] = 0.02 * jax.random.normal(
+                keys[1], (cfg.d_model, cfg.vocab_size), dtype)
+        segs = []
+        for si, seg in enumerate(self.segments):
+            lkeys = jax.random.split(keys[2 + si], seg.count)
+            segs.append(jax.vmap(
+                lambda k, _seg=seg: layer_init(k, cfg, _seg))(lkeys))
+        params["segments"] = segs
+        if cfg.mtp:
+            params["mtp"] = {
+                "proj": 0.02 * jax.random.normal(
+                    keys[-1], (2 * cfg.d_model, cfg.d_model), dtype),
+                "block": layer_init(jax.random.fold_in(keys[-1], 1), cfg,
+                                    self.segments[-1]),
+                "norm_h": norm_init(cfg.norm, cfg.d_model, cfg.norm_bias, dtype),
+                "norm_e": norm_init(cfg.norm, cfg.d_model, cfg.norm_bias, dtype),
+            }
+        return params
+
+    def param_specs(self, seed: int = 0):
+        return jax.eval_shape(self.init, jax.random.PRNGKey(seed))
+
+    # ---- caches ----
+
+    def init_cache(self, batch: int, max_seq: int) -> list:
+        caches = []
+        for seg in self.segments:
+            one = lambda _, _seg=seg: layer_cache_init(
+                self.cfg, _seg, batch, max_seq)
+            caches.append(jax.vmap(one)(jnp.arange(seg.count)))
+        return caches
+
+    def cache_specs(self, batch: int, max_seq: int):
+        return jax.eval_shape(lambda: self.init_cache(batch, max_seq))
+
+    # ---- forward ----
+
+    def hidden_states(self, params, tokens, positions, caches=None,
+                      mode: str = "train"):
+        """tokens [B, S] -> (h [B, S, D], new_caches, aux)."""
+        cfg = self.cfg
+        x = params["embed"][tokens]
+        aux_total = jnp.zeros((), jnp.float32)
+        new_caches = []
+        for si, seg in enumerate(self.segments):
+            seg_params = params["segments"][si]
+            seg_cache = caches[si] if caches is not None else None
+
+            unroll = seg.count if cfg.scan_unroll else 1
+            if mode == "train":
+                def body_train(carry, lp, _seg=seg):
+                    xx, nc, aux = layer_apply(cfg, _seg, lp, carry, positions,
+                                              None, "train")
+                    return constrain_residual(xx), aux
+
+                x, auxs = jax.lax.scan(
+                    jax.checkpoint(body_train), x, seg_params, unroll=unroll)
+                new_caches.append(None)
+            else:
+                def body_serve(carry, layer_in, _seg=seg):
+                    lp, lc = layer_in
+                    xx, nc, aux = layer_apply(cfg, _seg, lp, carry, positions,
+                                              lc, mode)
+                    return constrain_residual(xx), (nc, aux)
+
+                x, (ncache, auxs) = jax.lax.scan(
+                    body_serve, x, (seg_params, seg_cache), unroll=unroll)
+                new_caches.append(ncache)
+            aux_total = aux_total + auxs.sum()
+        h = apply_norm(cfg.norm, params["final_norm"], x)
+        return h, new_caches, aux_total
+
+    def unembed(self, params):
+        if self.cfg.tie_embeddings:
+            return params["embed"].T
+        return params["unembed"]
+
+    def logits(self, params, h):
+        return h @ self.unembed(params)
+
+    # ---- training loss (chunked over sequence) ----
+
+    def loss(self, params, batch: dict, seq_chunk: int = 512):
+        """batch: {"tokens": [B,S] int32, "labels": [B,S] int32,
+        optional "mask": [B,S]}.  Returns (loss, metrics)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        positions = jnp.arange(s)
+        h, _, aux = self.hidden_states(params, tokens, positions, mode="train")
+        w_un = self.unembed(params)
+        labels = batch["labels"]
+        mask = batch.get("mask")
+        if mask is None:
+            mask = jnp.ones_like(labels, jnp.float32)
+
+        ce, denom = _chunked_ce(h, w_un, labels, mask, seq_chunk)
+
+        if cfg.mtp:
+            ce_mtp, d_mtp = self._mtp_loss(params, h, tokens, labels, mask,
+                                           positions, seq_chunk)
+            ce = ce + 0.3 * ce_mtp
+        loss = ce / jnp.maximum(denom, 1.0) + aux
+        return loss, {"ce": ce / jnp.maximum(denom, 1.0), "aux": aux}
+
+    def _mtp_loss(self, params, h, tokens, labels, mask, positions, seq_chunk):
+        """deepseek MTP depth-1: predict token t+2 from (h_t, emb(token_{t+1}))."""
+        cfg = self.cfg
+        mp = params["mtp"]
+        nxt = jnp.roll(tokens, -1, axis=1)
+        e = params["embed"][nxt]
+        hh = jnp.concatenate([
+            apply_norm(cfg.norm, mp["norm_h"], h),
+            apply_norm(cfg.norm, mp["norm_e"], e),
+        ], axis=-1) @ mp["proj"]
+        hh, _, _ = layer_apply(cfg, self.segments[-1], mp["block"], hh,
+                               positions, None, "train")
+        lbl2 = jnp.roll(labels, -1, axis=1)
+        m2 = mask * (jnp.arange(tokens.shape[1]) < tokens.shape[1] - 1)
+        return _chunked_ce(hh, self.unembed(params), lbl2, m2, seq_chunk)
+
+    # ---- serving ----
+
+    def prefill(self, params, tokens, caches):
+        """Fill caches with a prompt; returns (last-token logits, caches)."""
+        s = tokens.shape[1]
+        h, caches, _ = self.hidden_states(
+            params, tokens, jnp.arange(s), caches, mode="prefill")
+        return self.logits(params, h[:, -1:, :]), caches
+
+    def decode_step(self, params, caches, tokens, pos):
+        """One decode step.  tokens [B,1]; pos [] absolute position."""
+        positions = pos + jnp.arange(tokens.shape[1])
+        h, caches, _ = self.hidden_states(
+            params, tokens, positions, caches, mode="decode")
+        return self.logits(params, h), caches
+
+
+def _chunked_ce(h, w_un, labels, mask, seq_chunk: int):
+    """Sum of masked CE over the sequence, computed in chunks so [B,S,V] is
+    never materialized.  Returns (ce_sum, mask_sum)."""
+    b, s, d = h.shape
+    chunk = min(seq_chunk, s)
+    if s % chunk:
+        pad = chunk - s % chunk
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    n = h.shape[1] // chunk
+    hc = h.reshape(b, n, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, n, chunk).transpose(1, 0, 2)
+    mc = mask.reshape(b, n, chunk).transpose(1, 0, 2)
+
+    def step(carry, inp):
+        ce_sum, m_sum = carry
+        hh, ll, mm = inp
+        logits = (hh @ w_un).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ll[..., None], axis=-1)[..., 0]
+        ce = (logz - gold) * mm
+        return (ce_sum + ce.sum(), m_sum + mm.sum()), None
+
+    (ce_sum, m_sum), _ = jax.lax.scan(
+        step, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (hc, lc, mc))
+    return ce_sum, m_sum

@@ -1,0 +1,2 @@
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_step
+from repro.optim.schedule import constant_schedule, warmup_cosine

@@ -1,0 +1,22 @@
+from repro.photonic.quant import (
+    QuantConfig,
+    compute_scale,
+    dequantize,
+    fake_quant,
+    fake_quant_ste,
+    quantize,
+    quantize_weights,
+    quantized_matmul,
+    sign_merge,
+    sign_split,
+)
+from repro.photonic.noise import MRDesign
+from repro.photonic.mrbank import COHERENT_BANK_LIMIT, NONCOHERENT_WDM_LIMIT
+from repro.photonic.perf import (
+    GhostConfig,
+    GnnModelSpec,
+    LayerSpec,
+    OrchFlags,
+    PerfReport,
+    simulate,
+)

@@ -1,0 +1,133 @@
+"""Optoelectronic device & circuit constants (paper Table 1 + Section 4.1).
+
+Every constant is taken from the paper (with its cited source) or, where the
+paper relied on an external simulator we cannot run offline (CACTI,
+DRAMsim3), from the nominal numbers the paper quotes for the same components,
+with provenance noted inline.  The analytic performance model
+(photonic/perf.py) consumes these.
+
+Units: seconds, watts, joules, dB, meters unless suffixed otherwise.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+# ---------------------------------------------------------------------------
+# Table 1 — device latencies and powers.
+# ---------------------------------------------------------------------------
+
+EO_TUNING_LATENCY = 20e-9        # 20 ns       [29]
+EO_TUNING_POWER_PER_NM = 4e-6    # 4 uW/nm     [29]
+TO_TUNING_LATENCY = 4e-6         # 4 us        [28]
+TO_TUNING_POWER_PER_FSR = 27.5e-3  # 27.5 mW/FSR [28]
+VCSEL_LATENCY = 0.07e-9          # 0.07 ns     [10]
+VCSEL_POWER = 1.3e-3             # 1.3 mW      [10]
+PD_LATENCY = 5.8e-12             # 5.8 ps      [10]
+PD_POWER = 2.8e-3                # 2.8 mW      [10]
+SOA_LATENCY = 0.3e-9             # 0.3 ns      [10]
+SOA_POWER = 2.2e-3               # 2.2 mW      [10]
+DAC_LATENCY = 0.29e-9            # 0.29 ns, 8 bit [46]
+DAC_POWER = 3e-3                 # 3 mW        [46]
+ADC_LATENCY = 0.82e-9            # 0.82 ns, 8 bit [47]
+ADC_POWER = 3.1e-3               # 3.1 mW      [47]
+
+# ---------------------------------------------------------------------------
+# Section 4.1 — photonic losses (dB) and laser model.
+# ---------------------------------------------------------------------------
+
+WAVEGUIDE_PROP_LOSS_DB_PER_CM = 1.0   # 1 dB/cm
+SPLITTER_LOSS_DB = 0.13               # [42]
+COMBINER_LOSS_DB = 0.9                # [42]
+MR_THROUGH_LOSS_DB = 0.02             # [44]
+MR_MODULATION_LOSS_DB = 0.72          # [45]
+EO_TUNING_LOSS_DB_PER_CM = 6.0        # [29]
+
+PD_SENSITIVITY_DBM = -20.0            # typical Ge PD sensitivity (per [10]-class
+                                      # links; the paper uses S_detector in Eq. 13
+                                      # without quoting the number — -20 dBm is the
+                                      # value its VCSEL/PD sources assume)
+LASER_EFFICIENCY = 0.25               # wall-plug efficiency of VCSEL sources
+
+MR_PITCH_UM = 20.0                    # MR center-to-center pitch along a waveguide
+                                      # (10 um radius rings, Section 4.2, + routing)
+
+# ---------------------------------------------------------------------------
+# Digital side: buffers (CACTI @7 nm per [38]+[40]) and HBM2 ([41], DRAMsim3).
+# ---------------------------------------------------------------------------
+
+# CACTI 20nm values scaled to 7nm with [40]'s scaling relations; the paper
+# does exactly this.  Energy-per-byte for the SRAM buffer sizes used by the
+# ECU (128-256 KB, 64 B lines):
+SRAM_READ_ENERGY_PER_BYTE = 0.24e-12   # J/B
+SRAM_WRITE_ENERGY_PER_BYTE = 0.30e-12  # J/B
+SRAM_LATENCY = 0.8e-9                  # s per access (pipelined)
+SRAM_BANDWIDTH = 64e9                  # B/s (64 B line per ns-class cycle)
+SRAM_LEAKAGE_POWER_PER_KB = 6e-6       # W/KB
+
+# HBM2 (8 GB stack, 256 GB/s peak — paper Section 4.1; access energy ~3.9 pJ/bit
+# is the standard HBM2 figure the DRAMsim3 config family uses).
+HBM_BANDWIDTH = 256e9                  # B/s
+HBM_ENERGY_PER_BYTE = 31.2e-12         # J/B  (3.9 pJ/bit)
+HBM_LATENCY = 100e-9                   # s, first-word
+HBM_REQUEST_ENERGY = 0.5e-9            # J per individual request (row activate
+                                       # + command overhead for small bursts)
+
+# ECU buffer sizes (Section 4.1).
+ECU_BUFFERS_KB = {
+    "input_vertices": 128,
+    "output_vertices": 128,
+    "edges": 256,
+    "weights": 128,
+}
+
+# Digital softmax unit for GAT ([37]): LUT design, 294 MHz.
+SOFTMAX_UNIT_FREQ = 294e6              # Hz -> one value per cycle
+SOFTMAX_UNIT_POWER = 4.0e-3            # W (LUT + add/sub datapath of [37])
+
+# ---------------------------------------------------------------------------
+# Laser power model (paper Eq. 13 — the second "Eq. 13" in Section 4.1).
+# ---------------------------------------------------------------------------
+
+
+def laser_power_dbm(photonic_loss_db: float, num_wavelengths: int,
+                    sensitivity_dbm: float = PD_SENSITIVITY_DBM) -> float:
+    """P_laser(dBm) >= S_detector + P_photo_loss + 10 log10(N_lambda)."""
+    if num_wavelengths < 1:
+        raise ValueError("need at least one wavelength")
+    return sensitivity_dbm + photonic_loss_db + 10.0 * math.log10(num_wavelengths)
+
+
+def dbm_to_watts(dbm: float) -> float:
+    return 1e-3 * 10.0 ** (dbm / 10.0)
+
+
+def watts_to_dbm(w: float) -> float:
+    return 10.0 * math.log10(max(w, 1e-30) / 1e-3)
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkLoss:
+    """Accumulate optical losses along a path (all dB)."""
+
+    waveguide_cm: float = 0.0
+    splitters: int = 0
+    combiners: int = 0
+    mrs_passed: int = 0       # through-port passes
+    mrs_modulating: int = 1   # active modulation events
+
+    @property
+    def total_db(self) -> float:
+        return (
+            self.waveguide_cm * WAVEGUIDE_PROP_LOSS_DB_PER_CM
+            + self.splitters * SPLITTER_LOSS_DB
+            + self.combiners * COMBINER_LOSS_DB
+            + self.mrs_passed * MR_THROUGH_LOSS_DB
+            + self.mrs_modulating * MR_MODULATION_LOSS_DB
+        )
+
+
+def bank_waveguide_cm(num_mrs: int, pitch_um: float = MR_PITCH_UM) -> float:
+    """Waveguide length (cm) through a bank of ``num_mrs`` MRs."""
+    return num_mrs * pitch_um * 1e-4

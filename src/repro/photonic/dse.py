@@ -1,0 +1,66 @@
+"""Architecture design-space exploration (paper Section 4.3, Fig. 7c).
+
+Sweeps [N, V, R_r, R_c, T_r] under the device-level feasibility limits
+(R_c + 1 <= 20 coherent MRs, R_r <= 18 WDM channels) and ranks configurations
+by mean EPB/GOPS across a suite of (model, dataset) pairs — the paper's
+objective.  The paper reports the optimum [20, 20, 18, 7, 17].
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Sequence
+
+from repro.core.graph import Graph
+from repro.photonic.mrbank import COHERENT_BANK_LIMIT, NONCOHERENT_WDM_LIMIT
+from repro.photonic.perf import GhostConfig, GnnModelSpec, OrchFlags, simulate
+
+
+@dataclasses.dataclass
+class DseResult:
+    config: GhostConfig
+    mean_epb_per_gops: float
+    mean_epb: float
+    mean_gops: float
+
+
+def default_grid() -> dict:
+    """A grid bracketing the paper's optimum while honoring device limits."""
+    return {
+        "n": (8, 12, 16, 20, 24),
+        "v": (8, 12, 16, 20, 24),
+        "rr": (6, 10, 14, 18),                      # <= 18 WDM channels
+        "rc": (3, 5, 7, 9, 11, 15, 19),             # +1 acc MR <= 20
+        "tr": (5, 9, 13, 17, 20),
+    }
+
+
+def explore(
+    workloads: Sequence[tuple[GnnModelSpec, Graph | Sequence[Graph], str]],
+    grid: dict | None = None,
+    flags: OrchFlags = OrchFlags(),
+    top_k: int = 10,
+) -> list[DseResult]:
+    grid = grid or default_grid()
+    results: list[DseResult] = []
+    for n, v, rr, rc, tr in itertools.product(
+        grid["n"], grid["v"], grid["rr"], grid["rc"], grid["tr"]
+    ):
+        if rc + 1 > COHERENT_BANK_LIMIT or rr > NONCOHERENT_WDM_LIMIT:
+            continue
+        cfg = GhostConfig(n=n, v=v, rr=rr, rc=rc, tr=tr)
+        epbgops, epbs, gopss = [], [], []
+        for model, graphs, ds in workloads:
+            r = simulate(model, graphs, cfg, flags, dataset_name=ds)
+            epbgops.append(r.epb_per_gops)
+            epbs.append(r.epb)
+            gopss.append(r.gops)
+        results.append(DseResult(
+            config=cfg,
+            mean_epb_per_gops=sum(epbgops) / len(epbgops),
+            mean_epb=sum(epbs) / len(epbs),
+            mean_gops=sum(gopss) / len(gopss),
+        ))
+    results.sort(key=lambda r: r.mean_epb_per_gops)
+    return results[:top_k]

@@ -1,0 +1,94 @@
+"""MR-bank design-space exploration (paper Section 4.2, Fig. 7a/b).
+
+Produces the coherent and non-coherent feasibility surfaces the paper uses to
+size GHOST's reduce units (coherent summation banks) and transform units
+(non-coherent WDM multiply banks), and exports the selected design limits the
+architecture DSE must respect:
+
+  COHERENT_BANK_LIMIT      = 20 MRs   (at 1520 nm)
+  NONCOHERENT_WDM_LIMIT    = 18 wavelengths (36 MRs across the two banks)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.photonic.noise import (
+    MRDesign,
+    heterodyne_noise_fraction,
+    homodyne_noise_fraction,
+    max_coherent_mrs,
+    max_noncoherent_wavelengths,
+    fsr_nm,
+    required_snr_db,
+    snr_db,
+)
+
+
+@dataclasses.dataclass
+class DsePoint:
+    wavelength_nm: float
+    num_elements: int  # MRs (coherent) or wavelengths (non-coherent)
+    snr_db: float
+    required_snr_db: float
+    feasible: bool
+
+
+def coherent_surface(
+    wavelengths_nm: Sequence[float],
+    mr_counts: Sequence[int],
+    design: MRDesign = MRDesign(),
+    n_levels: int = 128,
+) -> list[DsePoint]:
+    """Fig. 7a: SNR over (wavelength, #MRs) for coherent summation banks."""
+    out = []
+    for lam in wavelengths_nm:
+        req = required_snr_db(n_levels, lam, design.q_factor)
+        for n in mr_counts:
+            s = snr_db(homodyne_noise_fraction(n, lam, design))
+            out.append(DsePoint(lam, n, s, req, s >= req))
+    return out
+
+
+def noncoherent_surface(
+    num_wavelengths: Sequence[int],
+    design: MRDesign = MRDesign(),
+    start_wavelength_nm: float = 1550.0,
+    channel_spacing_nm: float = 1.0,
+    n_levels: int = 128,
+) -> list[DsePoint]:
+    """Fig. 7b: SNR over #wavelengths for WDM multiply banks (x-axis in the
+    paper is #rings = 2 x #wavelengths)."""
+    out = []
+    for n in num_wavelengths:
+        lam = start_wavelength_nm + channel_spacing_nm * np.arange(n)
+        mid = float(lam.mean())
+        s = snr_db(heterodyne_noise_fraction(lam, design.q_factor, design.filter_order))
+        req = max(required_snr_db(n_levels, float(l), design.q_factor) for l in lam)
+        fits = channel_spacing_nm * n <= fsr_nm(mid, design)
+        out.append(DsePoint(mid, n, s, req, (s >= req) and fits))
+    return out
+
+
+def selected_design(design: MRDesign = MRDesign(), n_levels: int = 128):
+    """The design limits GHOST adopts (Section 4.2 conclusions)."""
+    lam_sweep = np.arange(1500.0, 1581.0, 5.0)
+    best_lam, best_n = max(
+        ((lam, max_coherent_mrs(lam, design, n_levels)) for lam in lam_sweep),
+        key=lambda t: t[1],
+    )
+    return {
+        "coherent_wavelength_nm": float(best_lam),
+        "coherent_bank_limit": int(best_n),
+        "noncoherent_wdm_limit": int(max_noncoherent_wavelengths(design, n_levels=n_levels)),
+        "q_factor": design.q_factor,
+        "required_snr_db": required_snr_db(n_levels, best_lam, design.q_factor),
+    }
+
+
+# The limits adopted throughout the architecture (match paper Section 4.2).
+COHERENT_BANK_LIMIT = 20
+NONCOHERENT_WDM_LIMIT = 18

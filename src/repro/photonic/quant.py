@@ -1,0 +1,133 @@
+"""8-bit sign-split quantization (paper Sections 3.2, 4.1; Table 3).
+
+GHOST represents positive and negative parameter values *separately* (the
+balanced photodetector subtracts the two polarities), so each polarity uses
+N_levels = 2^(n-1) = 2^7 amplitude levels for n = 8-bit parameters — this is
+the N_levels that enters the SNR constraint (Eq. 12/13) and the MR-bank DSE.
+
+On TPU the same scheme is symmetric int8 quantization with an int32
+accumulator: q in [-127, 127], sign-split into pos = max(q, 0) and
+neg = max(-q, 0) (each 7-bit), with (pos - neg) recovering q exactly — the
+BPD subtraction.  ``quantized_matmul`` is the serving fast path used by the
+combine block; the Pallas kernel in ``repro.kernels.quant_matmul`` computes
+the identical contraction with explicit MXU tiling, and this module is its
+oracle.
+
+A straight-through-estimator fake-quant is provided for quantization-aware
+evaluation/training experiments (Table 3 reproduces post-training quant).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+INT8_LEVELS = 127  # per-polarity 2^7 - 1 amplitude levels
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    bits: int = 8
+    per_channel_weights: bool = True   # one scale per output channel
+    per_tensor_activations: bool = True
+    stochastic: bool = False           # stochastic rounding (training experiments)
+
+    @property
+    def qmax(self) -> int:
+        return 2 ** (self.bits - 1) - 1  # 127 for 8-bit
+
+    @property
+    def n_levels(self) -> int:
+        """Per-polarity amplitude levels — the paper's N_levels = 2^(n-1)."""
+        return 2 ** (self.bits - 1)
+
+
+def compute_scale(x: jax.Array, axis=None, qmax: int = INT8_LEVELS) -> jax.Array:
+    """Symmetric scale: s = max|x| / qmax (never zero)."""
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None)
+    return jnp.maximum(amax, 1e-12) / qmax
+
+
+def quantize(x: jax.Array, scale: jax.Array, qmax: int = INT8_LEVELS,
+             key: jax.Array | None = None) -> jax.Array:
+    """Quantize to signed integers in [-qmax, qmax] (round-to-nearest-even,
+    or stochastic rounding when a PRNG key is supplied)."""
+    y = x / scale
+    if key is not None:
+        floor = jnp.floor(y)
+        p = y - floor
+        y = floor + (jax.random.uniform(key, y.shape) < p)
+    else:
+        y = jnp.round(y)
+    return jnp.clip(y, -qmax, qmax).astype(jnp.int8)
+
+
+def sign_split(q: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Split signed int8 into the two photonic polarities (each in [0, 127])."""
+    pos = jnp.maximum(q, 0).astype(jnp.int8)
+    neg = jnp.maximum(-q.astype(jnp.int16), 0).astype(jnp.int8)
+    return pos, neg
+
+
+def sign_merge(pos: jax.Array, neg: jax.Array) -> jax.Array:
+    """Balanced-photodetector recombination: q = pos - neg."""
+    return (pos.astype(jnp.int16) - neg.astype(jnp.int16)).astype(jnp.int8)
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(scale.dtype) * scale
+
+
+def fake_quant(x: jax.Array, cfg: QuantConfig = QuantConfig(), axis=None) -> jax.Array:
+    """Quantize-dequantize (post-training quantization emulation)."""
+    s = compute_scale(x, axis=axis, qmax=cfg.qmax)
+    return dequantize(quantize(x, s, cfg.qmax), s)
+
+
+@jax.custom_vjp
+def fake_quant_ste(x: jax.Array) -> jax.Array:
+    s = compute_scale(x, qmax=INT8_LEVELS)
+    return dequantize(quantize(x, s, INT8_LEVELS), s)
+
+
+def _fq_fwd(x):
+    return fake_quant_ste(x), None
+
+
+def _fq_bwd(_, g):
+    return (g,)  # straight-through
+
+
+fake_quant_ste.defvjp(_fq_fwd, _fq_bwd)
+
+
+def quantize_weights(w: jax.Array, cfg: QuantConfig = QuantConfig()):
+    """Quantize a weight matrix [F_in, F_out] -> (q_int8, scale [1, F_out])."""
+    axis = 0 if cfg.per_channel_weights else None
+    s = compute_scale(w, axis=axis, qmax=cfg.qmax)
+    q = quantize(w, s, cfg.qmax)
+    return q, jnp.asarray(s, w.dtype)
+
+
+def quantized_matmul(
+    x: jax.Array, w: jax.Array, cfg: QuantConfig = QuantConfig()
+) -> jax.Array:
+    """Photonic combine-block MVM: int8 x int8 -> int32 -> dequantized float.
+
+    Both operands are quantized on the fly (activations per-tensor, weights
+    per output channel), multiplied in the integer domain exactly as the MR
+    banks multiply amplitude levels, accumulated in int32 (the photodetector
+    current sum), and rescaled — functionally identical to the sign-split
+    pos/neg decomposition since (p_x - n_x)(p_w - n_w) = q_x q_w.
+    """
+    sx = compute_scale(x, axis=None, qmax=cfg.qmax)
+    qx = quantize(x, sx, cfg.qmax)
+    qw, sw = quantize_weights(w, cfg)
+    acc = jax.lax.dot_general(
+        qx, qw,
+        (((qx.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    return acc.astype(w.dtype) * sx * sw

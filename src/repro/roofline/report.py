@@ -1,0 +1,88 @@
+"""Render the dry-run JSON records into the EXPERIMENTS.md roofline tables.
+
+Usage:
+  PYTHONPATH=src python -m repro.roofline.report experiments/dryrun [--mesh single_16x16]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from collections import defaultdict
+
+
+def load_records(dirname: str) -> list[dict]:
+    out = []
+    for name in sorted(os.listdir(dirname)):
+        if name.endswith(".json"):
+            with open(os.path.join(dirname, name)) as f:
+                out.append(json.load(f))
+    return out
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x * 1e6:.0f}us"
+
+
+def roofline_table(records: list[dict], mesh: str) -> str:
+    rows = []
+    header = ("| arch | shape | compute | memory | collective | bottleneck | "
+              "roofline frac | useful (6ND/HLO) | HBM/dev |")
+    sep = "|" + "---|" * 9
+    for r in records:
+        if r.get("mesh_name") != mesh and r.get("mesh") != mesh:
+            continue
+        if "skipped" in r:
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | SKIP | — | — | — |")
+            continue
+        if "error" in r:
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                        f"ERROR: {r['error'][:40]} | — | — | — |")
+            continue
+        roof = r["roofline"]
+        terms = {"compute": roof["compute_s"], "memory": roof["memory_s"],
+                 "collective": roof["collective_s"]}
+        dom = max(terms.values())
+        frac = terms["compute"] / dom if dom else 0.0
+        mem = r["memory_analysis"]
+        hbm = (mem["temp_bytes"] + r.get("param_bytes_per_device", 0)) / 1e9
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(roof['compute_s'])} | "
+            f"{fmt_s(roof['memory_s'])} | {fmt_s(roof['collective_s'])} | "
+            f"{roof['bottleneck']} | {frac:.2f} | "
+            f"{min(roof['useful_ratio'], 9.99):.2f} | {hbm:.1f}GB |")
+    return "\n".join([header, sep] + rows)
+
+
+def summary(records: list[dict], mesh: str) -> dict:
+    ok = [r for r in records
+          if (r.get("mesh_name") == mesh or r.get("mesh") == mesh)]
+    done = [r for r in ok if "roofline" in r]
+    skipped = [r for r in ok if "skipped" in r]
+    errors = [r for r in ok if "error" in r]
+    bott = defaultdict(int)
+    for r in done:
+        bott[r["roofline"]["bottleneck"]] += 1
+    return {"cells": len(ok), "compiled": len(done), "skipped": len(skipped),
+            "errors": len(errors), "bottlenecks": dict(bott)}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("dirname")
+    ap.add_argument("--mesh", default="single_16x16")
+    args = ap.parse_args()
+    records = load_records(args.dirname)
+    print(f"## Roofline ({args.mesh})\n")
+    print(json.dumps(summary(records, args.mesh)))
+    print()
+    print(roofline_table(records, args.mesh))
+
+
+if __name__ == "__main__":
+    main()

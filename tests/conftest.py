@@ -1,0 +1,10 @@
+import os
+
+# Tests must see the real (single-device) CPU backend; only the dry-run
+# process forces 512 host devices.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+from hypothesis import settings
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")

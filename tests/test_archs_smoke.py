@@ -1,0 +1,144 @@
+"""Per-architecture smoke tests (deliverable f): every pool config, reduced
+to CPU size with its family structure intact, runs one forward/train step
+and a prefill+decode round; outputs have the right shapes and no NaNs."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, get_config, get_smoke_config
+from repro.models import build_model
+from repro.roofline.analysis import active_params, total_params
+
+B, S = 2, 16
+
+
+def _batch(cfg, rng):
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    labels = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    batch = {"tokens": tokens, "labels": labels}
+    if cfg.encoder_layers:
+        batch["frames"] = jnp.asarray(
+            rng.standard_normal((B, cfg.encoder_frames, cfg.d_model)),
+            jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_smoke_train_step(name):
+    cfg = get_smoke_config(name)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg, np.random.default_rng(0))
+    loss, metrics = model.loss(params, batch, seq_chunk=8)
+    assert jnp.isfinite(loss), f"{name}: non-finite loss"
+    # chance-level CE at init
+    assert 0.5 * np.log(cfg.vocab_size) < float(loss) < 3 * np.log(cfg.vocab_size)
+    grads = jax.grad(lambda p: model.loss(p, batch, seq_chunk=8)[0])(params)
+    gnorm = sum(float(jnp.sum(jnp.square(g))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_smoke_serve_round(name):
+    cfg = get_smoke_config(name)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    if cfg.encoder_layers:
+        frames = jnp.asarray(
+            rng.standard_normal((B, cfg.encoder_frames, cfg.d_model)),
+            jnp.float32)
+        caches = model.init_cache(params, frames, B, 32)
+    else:
+        caches = model.init_cache(B, 32)
+    logits, caches = model.prefill(params, tokens[:, :8], caches)
+    assert logits.shape == (B, 1, cfg.vocab_size)
+    logits, caches = model.decode_step(params, caches, tokens[:, 8:9],
+                                       jnp.asarray(8))
+    assert logits.shape == (B, 1, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+DENSE_ARCHS = [n for n in ARCH_NAMES
+               if get_config(n).moe is None]
+
+
+@pytest.mark.parametrize("name", DENSE_ARCHS)
+def test_decode_matches_teacher_forcing(name):
+    """Incremental decode == full forward (dense archs; MoE archs differ by
+    capacity-drop semantics — tested separately below)."""
+    cfg = get_smoke_config(name)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(2)
+    s = 10
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, s)), jnp.int32)
+    if cfg.encoder_layers:
+        frames = jnp.asarray(
+            rng.standard_normal((B, cfg.encoder_frames, cfg.d_model)),
+            jnp.float32)
+        enc = model.encode(params, frames)
+        h, _ = model.decoder_states(params, tokens, enc, mode="train")
+        full = h @ params["embed"].T
+        caches = model.init_cache(params, frames, B, s)
+    else:
+        h, _, _ = model.hidden_states(params, tokens, jnp.arange(s),
+                                      mode="train")
+        full = model.logits(params, h)
+        caches = model.init_cache(B, s)
+    lg, caches = model.prefill(params, tokens[:, :5], caches)
+    errs = [float(jnp.abs(lg[:, -1] - full[:, 4]).max())]
+    for t in range(5, s):
+        lg, caches = model.decode_step(params, caches, tokens[:, t:t + 1],
+                                       jnp.asarray(t))
+        errs.append(float(jnp.abs(lg[:, 0] - full[:, t]).max()))
+    assert max(errs) < 5e-4, f"{name}: decode drift {max(errs)}"
+
+
+MOE_ARCHS = [n for n in ARCH_NAMES if get_config(n).moe is not None]
+
+
+@pytest.mark.parametrize("name", MOE_ARCHS)
+def test_moe_decode_matches_with_ample_capacity(name):
+    cfg = get_smoke_config(name)
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=64.0))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    s = 8
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, s)), jnp.int32)
+    h, _, _ = model.hidden_states(params, tokens, jnp.arange(s), mode="train")
+    full = model.logits(params, h)
+    caches = model.init_cache(B, s)
+    lg, caches = model.prefill(params, tokens[:, :4], caches)
+    errs = [float(jnp.abs(lg[:, -1] - full[:, 3]).max())]
+    for t in range(4, s):
+        lg, caches = model.decode_step(params, caches, tokens[:, t:t + 1],
+                                       jnp.asarray(t))
+        errs.append(float(jnp.abs(lg[:, 0] - full[:, t]).max()))
+    assert max(errs) < 5e-4, f"{name}: decode drift {max(errs)}"
+
+
+def test_full_config_param_counts():
+    """Sanity: analytic param counts land near the advertised sizes."""
+    totals = {n: total_params(get_config(n)) for n in ARCH_NAMES}
+    assert 100e9 < totals["mistral-large-123b"] < 140e9
+    assert 600e9 < totals["deepseek-v3-671b"] < 750e9
+    assert 40e9 < totals["mixtral-8x7b"] < 56e9
+    assert 1.0e9 < totals["hymba-1.5b"] < 2.2e9
+    assert 1.2e9 < totals["rwkv6-1.6b"] < 2.2e9
+    assert 30e9 < totals["chameleon-34b"] < 40e9
+    # MoE active << total
+    assert active_params(get_config("deepseek-v3-671b")) < 0.1 * totals["deepseek-v3-671b"]
+
+
+def test_long_context_policy():
+    """long_500k runs only for sub-quadratic archs (DESIGN.md skip policy)."""
+    sub = {n for n in ARCH_NAMES if get_config(n).subquadratic}
+    assert sub == {"hymba-1.5b", "rwkv6-1.6b"}

@@ -1,0 +1,206 @@
+"""Layer-level unit tests: rope, attention variants, MLA, SSM, RWKV, MoE."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import MLAConfig, ModelConfig, MoEConfig, RWKVConfig, SSMConfig
+from repro.models.layers.attention import attn_apply, attn_init, chunked_attention
+from repro.models.layers.mla import init_mla_cache, mla_decode, mla_init, mla_prefill
+from repro.models.layers.moe import moe_apply, moe_init
+from repro.models.layers.rope import apply_rope, rope_angles
+from repro.models.layers.rwkv import (
+    init_rwkv_cache,
+    rwkv_time_mix,
+    rwkv_time_mix_init,
+)
+from repro.models.layers.ssm import SSMConfig as _S, init_ssm_cache, ssm_apply, ssm_init
+
+
+def naive_attention(q, k, v, causal=True, window=0):
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    kk = jnp.repeat(k, g, axis=2)
+    vv = jnp.repeat(v, g, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kk) / hd ** 0.5
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((sq, k.shape[1]), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, vv)
+
+
+@pytest.mark.parametrize("sq,h,kvh,chunk,qchunk", [
+    (16, 4, 4, 8, 8), (32, 8, 2, 8, 16), (24, 6, 3, 32, 512), (16, 4, 1, 4, 4),
+])
+def test_chunked_attention_matches_naive(sq, h, kvh, chunk, qchunk):
+    rng = np.random.default_rng(0)
+    hd = 16
+    q = jnp.asarray(rng.standard_normal((2, sq, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((2, sq, kvh, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((2, sq, kvh, hd)), jnp.float32)
+    got = chunked_attention(q, k, v, causal=True, chunk_size=chunk,
+                            q_chunk_size=qchunk)
+    ref = naive_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=2e-5)
+
+
+def test_sliding_window_matches_naive():
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.standard_normal((1, 24, 4, 8)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 24, 2, 8)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 24, 2, 8)), jnp.float32)
+    got = chunked_attention(q, k, v, causal=True, window=5, chunk_size=8,
+                            q_chunk_size=8)
+    ref = naive_attention(q, k, v, causal=True, window=5)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=2e-5)
+
+
+def test_gqa_equals_mha_when_kv_heads_match():
+    """GQA with kv=H and repeated kv == plain MHA."""
+    rng = np.random.default_rng(2)
+    q = jnp.asarray(rng.standard_normal((1, 8, 4, 8)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 8, 4, 8)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 8, 4, 8)), jnp.float32)
+    a = chunked_attention(q, k, v, chunk_size=4)
+    k2 = k[:, :, :2].repeat(2, 2)  # fake 2-kv-head tensors expanded back
+    # instead: verify bitwise equal path with kvh=h vs manual naive
+    ref = naive_attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(ref), atol=2e-5)
+
+
+def test_rope_preserves_norm_and_relative_phase():
+    pos = jnp.arange(12)
+    x = jnp.asarray(np.random.default_rng(3).standard_normal((1, 12, 2, 16)),
+                    jnp.float32)
+    y = apply_rope(x, pos, theta=10000.0, fraction=1.0)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1), rtol=1e-5)
+    # dot(q_i, k_j) depends only on i - j:
+    q = apply_rope(jnp.ones((1, 12, 1, 16)), pos, 10000.0)
+    k = apply_rope(jnp.ones((1, 12, 1, 16)), pos, 10000.0)
+    d1 = jnp.einsum("d,d->", q[0, 5, 0], k[0, 3, 0])
+    d2 = jnp.einsum("d,d->", q[0, 9, 0], k[0, 7, 0])
+    assert abs(float(d1 - d2)) < 1e-4
+
+
+def test_partial_rope_leaves_tail_untouched():
+    pos = jnp.arange(6)
+    x = jnp.asarray(np.random.default_rng(4).standard_normal((1, 6, 1, 16)),
+                    jnp.float32)
+    y = apply_rope(x, pos, theta=10000.0, fraction=0.5)
+    np.testing.assert_allclose(np.asarray(y[..., 8:]), np.asarray(x[..., 8:]))
+    assert not np.allclose(np.asarray(y[..., :8]), np.asarray(x[..., :8]))
+
+
+def test_mla_prefill_decode_consistency():
+    cfg = MLAConfig(q_lora_rank=32, kv_lora_rank=16, qk_nope_head_dim=8,
+                    qk_rope_head_dim=4, v_head_dim=8)
+    d, h, s, b = 32, 2, 10, 2
+    p = mla_init(jax.random.PRNGKey(0), d, h, cfg)
+    x = jnp.asarray(np.random.default_rng(5).standard_normal((b, s, d)),
+                    jnp.float32)
+    full, _ = mla_prefill(p, x, h, cfg, jnp.arange(s), 10000.0)
+    cache = init_mla_cache(b, s, cfg, jnp.float32)
+    _, cache = mla_prefill(p, x[:, :5], h, cfg, jnp.arange(5), 10000.0,
+                           cache=cache)
+    outs = []
+    for t in range(5, s):
+        o, cache = mla_decode(p, x[:, t:t + 1], h, cfg,
+                              jnp.asarray([t]), 10000.0, cache)
+        outs.append(o)
+    got = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(full[:, 5:]),
+                               atol=2e-4)
+
+
+def test_ssm_chunked_equals_stepwise():
+    cfg = _S(state_dim=4, expand=2, conv_width=3)
+    d, b, s = 8, 2, 13
+    p = ssm_init(jax.random.PRNGKey(1), d, cfg)
+    x = jnp.asarray(np.random.default_rng(6).standard_normal((b, s, d)) * 0.3,
+                    jnp.float32)
+    full, _ = ssm_apply(p, x, cfg, cache=None, chunk_size=4)
+    cache = init_ssm_cache(b, d, cfg)
+    outs = []
+    for t in range(s):
+        o, cache = ssm_apply(p, x[:, t:t + 1], cfg, cache=cache, chunk_size=4)
+        outs.append(o)
+    got = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(full), atol=1e-4)
+
+
+def test_rwkv_wkv_recurrence_manual():
+    """One head, tiny dims: scan output == hand-rolled recurrence."""
+    cfg = RWKVConfig(head_dim=4, decay_lora=4, gate_lora=2)
+    d, b, s = 4, 1, 6
+    p = rwkv_time_mix_init(jax.random.PRNGKey(2), d, cfg)
+    x = jnp.asarray(np.random.default_rng(7).standard_normal((b, s, d)) * 0.5,
+                    jnp.float32)
+    y, _ = rwkv_time_mix(p, x, cfg)
+    assert y.shape == (b, s, d)
+    assert bool(jnp.all(jnp.isfinite(y)))
+    # streaming == full
+    cache = init_rwkv_cache(b, d, cfg)
+    outs = []
+    for t in range(s):
+        class C:  # minimal cache adapter
+            pass
+        o, (st, last) = rwkv_time_mix(p, x[:, t:t + 1], cfg, cache)
+        cache = cache._replace(wkv_state=st, tm_last=last,
+                               length=cache.length + 1)
+        outs.append(o)
+    got = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(y), atol=1e-4)
+
+
+def test_moe_routing_invariants():
+    cfg = MoEConfig(num_experts=4, top_k=2, d_ff_expert=16,
+                    capacity_factor=8.0)
+    d, b, s = 8, 2, 6
+    p = moe_init(jax.random.PRNGKey(3), d, cfg)
+    x = jnp.asarray(np.random.default_rng(8).standard_normal((b, s, d)),
+                    jnp.float32)
+    out, aux = moe_apply(p, x, cfg)
+    assert out.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_moe_identical_experts_equal_dense_ffn():
+    """With all experts identical and ample capacity, MoE == one dense FFN
+    (routing weights sum to 1)."""
+    cfg = MoEConfig(num_experts=4, top_k=2, d_ff_expert=16, capacity_factor=16.0)
+    d, b, s = 8, 2, 5
+    p = moe_init(jax.random.PRNGKey(4), d, cfg)
+    p = dict(p)
+    for k in ("w_gate", "w_up", "w_down"):
+        p[k] = jnp.broadcast_to(p[k][0:1], p[k].shape)
+    x = jnp.asarray(np.random.default_rng(9).standard_normal((b, s, d)),
+                    jnp.float32)
+    out, _ = moe_apply(p, x, cfg)
+    xt = x.reshape(-1, d)
+    h = jax.nn.silu(xt @ p["w_gate"][0]) * (xt @ p["w_up"][0])
+    ref = (h @ p["w_down"][0]).reshape(b, s, d)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)
+
+
+def test_moe_capacity_drops_tokens():
+    cfg = MoEConfig(num_experts=2, top_k=1, d_ff_expert=8, capacity_factor=0.1)
+    d = 4
+    p = moe_init(jax.random.PRNGKey(5), d, cfg)
+    x = jnp.asarray(np.random.default_rng(10).standard_normal((1, 32, d)),
+                    jnp.float32)
+    out, _ = moe_apply(p, x, cfg)
+    # capacity 0.1 -> most tokens dropped -> many exactly-zero outputs
+    zero_rows = np.sum(np.abs(np.asarray(out)).sum(-1) < 1e-9)
+    assert zero_rows > 16

@@ -1,0 +1,81 @@
+"""Photonic noise models (Eqs. 2-13): physics invariants + the paper's
+reported device-DSE results (Section 4.2)."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.photonic import noise as nz
+
+D = nz.MRDesign()
+
+
+def test_required_snr_matches_paper():
+    # Paper: ~21.3 dB for N_levels=2^7 at the selected design.
+    assert abs(nz.required_snr_db(128, 1520, 3100) - 21.16) < 0.2
+    assert abs(nz.required_snr_db(128, 1550, 3100) - 21.07) < 0.2
+
+
+def test_coherent_bank_limit_is_20_at_1520nm():
+    assert nz.max_coherent_mrs(1520.0, D) == 20
+
+
+def test_1520nm_is_coherent_optimum():
+    best = max(np.arange(1500, 1581, 5.0), key=lambda l: nz.max_coherent_mrs(l, D))
+    assert best == 1520.0
+
+
+def test_noncoherent_limit_is_18_wavelengths():
+    assert nz.max_noncoherent_wavelengths(D) == 18
+
+
+def test_fwhm_eq5():
+    assert nz.fwhm_nm(1550, 3100) == pytest.approx(0.5)
+    assert nz.tunable_range_nm(1550, 3100) == pytest.approx(1.0)
+
+
+@given(st.integers(1, 40))
+def test_homodyne_noise_monotone_in_bank_size(n):
+    a = nz.homodyne_noise_fraction(n, 1520.0, D)
+    b = nz.homodyne_noise_fraction(n + 1, 1520.0, D)
+    assert b > a >= 0.0
+
+
+@given(st.floats(1000, 10000), st.floats(0.2, 5.0))
+def test_heterodyne_noise_decreases_with_spacing_and_q(q, spacing):
+    lam = 1550 + spacing * np.arange(8)
+    tight = nz.heterodyne_noise_fraction(lam, q, 2.0)
+    wide = nz.heterodyne_noise_fraction(1550 + 2 * spacing * np.arange(8), q, 2.0)
+    assert wide <= tight + 1e-12
+    higher_q = nz.heterodyne_noise_fraction(lam, q * 2, 2.0)
+    assert higher_q <= tight + 1e-12
+
+
+def test_snr_db_definition():
+    assert nz.snr_db(0.01) == pytest.approx(20.0)
+
+
+def test_q_factor_eq7_increases_with_weaker_coupling():
+    q1 = nz.q_factor_from_coupling(0.3, 0.99, 1550, D)
+    q2 = nz.q_factor_from_coupling(0.1, 0.99, 1550, D)
+    assert q2 > q1 > 0
+
+
+def test_ted_cancels_thermal_crosstalk():
+    rng = np.random.default_rng(0)
+    n = 12
+    k = np.eye(n) + 0.08 * rng.random((n, n))
+    k = (k + k.T) / 2
+    t = rng.random(n)
+    naive = nz.thermal_crosstalk_error(k, t, use_ted=False)
+    ted = nz.thermal_crosstalk_error(k, t, use_ted=True)
+    assert ted < 1e-9
+    assert naive > 1e-3
+
+
+def test_ted_singular_coupling_raises():
+    k = np.ones((4, 4))  # rank-1: physically undecomposable
+    with pytest.raises(ValueError):
+        nz.ted_drive_levels(k, np.ones(4))

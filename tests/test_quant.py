@@ -1,0 +1,89 @@
+"""Photonic 8-bit sign-split quantization properties (Section 3.2 / C4)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.photonic.quant import (
+    QuantConfig,
+    compute_scale,
+    dequantize,
+    fake_quant,
+    fake_quant_ste,
+    quantize,
+    quantized_matmul,
+    sign_merge,
+    sign_split,
+)
+
+floats = hnp.arrays(np.float32, st.integers(2, 64).map(lambda n: (n,)),
+                    elements=st.floats(-100, 100, width=32))
+
+
+@given(floats)
+def test_roundtrip_error_bounded_by_half_scale(x):
+    x = jnp.asarray(x)
+    s = compute_scale(x)
+    q = quantize(x, s)
+    err = jnp.abs(dequantize(q, s) - jnp.clip(x, -127 * s, 127 * s))
+    assert float(err.max()) <= float(s) * 0.5 + 1e-7
+
+
+@given(floats)
+def test_sign_split_polarities_are_7bit(x):
+    """Each polarity uses N_levels = 2^7 levels (paper Eq. 12 input)."""
+    x = jnp.asarray(x)
+    q = quantize(x, compute_scale(x))
+    pos, neg = sign_split(q)
+    assert int(jnp.max(pos)) <= 127 and int(jnp.min(pos)) >= 0
+    assert int(jnp.max(neg)) <= 127 and int(jnp.min(neg)) >= 0
+    np.testing.assert_array_equal(np.asarray(sign_merge(pos, neg)), np.asarray(q))
+    # BPD subtraction linearity: (p_x - n_x) recovers q exactly
+    assert QuantConfig().n_levels == 128
+
+
+def test_quantized_matmul_close_to_fp32():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((32, 64)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((64, 16)).astype(np.float32))
+    y = quantized_matmul(x, w)
+    ref = x @ w
+    rel = float(jnp.abs(y - ref).max() / jnp.abs(ref).max())
+    assert rel < 0.03  # 8-bit accumulation error bound (Table 3 territory)
+
+
+def test_quantized_matmul_equals_sign_split_form():
+    """(p_x - n_x)(p_w - n_w) == q_x q_w: the BPD identity."""
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((8, 12)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((12, 5)).astype(np.float32))
+    cfg = QuantConfig()
+    sx = compute_scale(x)
+    qx = quantize(x, sx)
+    from repro.photonic.quant import quantize_weights
+    qw, sw = quantize_weights(w, cfg)
+    px, nx = sign_split(qx)
+    pw, nw = sign_split(qw)
+    acc_split = (
+        px.astype(jnp.int32) @ pw.astype(jnp.int32)
+        - px.astype(jnp.int32) @ nw.astype(jnp.int32)
+        - nx.astype(jnp.int32) @ pw.astype(jnp.int32)
+        + nx.astype(jnp.int32) @ nw.astype(jnp.int32)
+    )
+    acc_direct = qx.astype(jnp.int32) @ qw.astype(jnp.int32)
+    np.testing.assert_array_equal(np.asarray(acc_split), np.asarray(acc_direct))
+
+
+def test_fake_quant_idempotent():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal((20,)).astype(np.float32))
+    y = fake_quant(x)
+    z = fake_quant(y)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(z), atol=1e-6)
+
+
+def test_ste_gradient_passes_through():
+    g = jax.grad(lambda x: fake_quant_ste(x).sum())(jnp.ones((5,)))
+    np.testing.assert_allclose(np.asarray(g), np.ones(5))
