@@ -26,6 +26,7 @@ def main() -> None:
         fig9_breakdown,
         fig10_12_comparison,
         kernel_micro,
+        serving_throughput,
         table2_datasets,
         table3_accuracy,
     )
@@ -39,6 +40,7 @@ def main() -> None:
         "fig9": fig9_breakdown.run,
         "fig10_12": fig10_12_comparison.run,
         "kernels": kernel_micro.run,
+        "serving": serving_throughput.run,
     }
     selected = (args.only.split(",") if args.only else list(suites))
 

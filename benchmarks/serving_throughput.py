@@ -1,0 +1,131 @@
+"""Serving-throughput benchmark: the engine vs the naive per-request loop.
+
+Emits the usual ``name,us,derived`` CSV lines plus one BENCH JSON document
+(req/s, p50/p99 latency, cache hit rate, traces compiled) so the serving
+perf trajectory is machine-trackable across PRs:
+
+  BENCH_JSON {"bench": "serving_throughput", ...}
+
+Run:  PYTHONPATH=src python benchmarks/serving_throughput.py [--requests N]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import numpy as np
+
+try:
+    from benchmarks.common import emit
+except ModuleNotFoundError:
+    # Standalone invocation (python benchmarks/serving_throughput.py):
+    # put the repo root on the path so the package import resolves.
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    from benchmarks.common import emit
+from repro.core import Graph, partition_graph, to_blocked
+from repro.gnn import build_model
+from repro.photonic.perf import GhostConfig, GnnModelSpec
+from repro.serving import GnnServeEngine
+
+
+def _request_stream(num_requests: int, working_set: int, f: int,
+                    seed: int = 0) -> list[Graph]:
+    rng = np.random.default_rng(seed)
+    pool = []
+    for _ in range(working_set):
+        nv = int(rng.integers(24, 96))
+        ne = int(rng.integers(2 * nv, 6 * nv))
+        pool.append(Graph(
+            edge_src=rng.integers(0, nv, ne).astype(np.int32),
+            edge_dst=rng.integers(0, nv, ne).astype(np.int32),
+            node_feat=rng.standard_normal((nv, f)).astype(np.float32),
+        ).validate())
+    return [pool[int(rng.integers(0, working_set))]
+            for _ in range(num_requests)]
+
+
+def _naive_loop(model, params, stream, cfg) -> float:
+    """The pre-engine baseline: re-partition + fresh shapes every request."""
+    import jax.numpy as jnp
+
+    t0 = time.time()
+    for g in stream:
+        pg = partition_graph(g, v=cfg.v, n=cfg.n)
+        featp = jnp.asarray(pg.pad_features(g.node_feat))
+        out = model.apply_blocked(params, to_blocked(pg), featp)
+        jax.block_until_ready(out)
+    return time.time() - t0
+
+
+def run(quick: bool = True, requests: int | None = None,
+        working_set: int = 10, slots: int = 8, backend: str = "jnp",
+        include_naive: bool = True) -> dict:
+    requests = requests or (32 if quick else 256)
+    f, hidden, classes = 16, 16, 3
+    stream = _request_stream(requests, working_set, f)
+
+    model = build_model("gcn", f, classes, hidden=hidden)
+    params = model.init(jax.random.PRNGKey(0))
+    cfg = GhostConfig()
+    spec = GnnModelSpec.gcn(f, hidden, classes)
+
+    engine = GnnServeEngine(model, params, task="node", cfg=cfg, spec=spec,
+                            slots=slots, backend=backend,
+                            dataset_name="synthetic")
+    report = engine.run(stream)
+    emit("serving/engine", report.wall_s / requests * 1e6,
+         f"req_s={report.req_per_s:.1f};hit={report.cache_hit_rate:.2f};"
+         f"traces={report.traces_compiled}")
+
+    doc = {
+        "bench": "serving_throughput",
+        "requests": requests,
+        "working_set": working_set,
+        "slots": slots,
+        "backend": backend,
+        "req_per_s": report.req_per_s,
+        "p50_latency_ms": report.p50_latency_ms,
+        "p99_latency_ms": report.p99_latency_ms,
+        "mean_batch_size": report.mean_batch_size,
+        "cache_hit_rate": report.cache_hit_rate,
+        "traces_compiled": report.traces_compiled,
+        "buckets": report.buckets,
+        "hw_req_per_s": report.hw_req_per_s,
+        "hw_avg_power_w": report.hw_avg_power_w,
+    }
+    if include_naive:
+        naive_s = _naive_loop(model, params, stream, cfg)
+        emit("serving/naive_loop", naive_s / requests * 1e6,
+             f"req_s={requests / naive_s:.1f}")
+        doc["naive_req_per_s"] = requests / naive_s
+        doc["speedup_vs_naive"] = (report.req_per_s * naive_s / requests
+                                   if naive_s > 0 else 0.0)
+    print("BENCH_JSON " + json.dumps(doc, default=float))
+    return doc
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--working-set", type=int, default=10)
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--backend", choices=("jnp", "pallas"), default="jnp")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--no-naive", action="store_true",
+                    help="skip the naive-loop baseline timing")
+    args = ap.parse_args()
+    if args.working_set < 1 or args.slots < 1 or (
+            args.requests is not None and args.requests < 1):
+        ap.error("--requests, --working-set and --slots must be >= 1")
+    run(quick=not args.full, requests=args.requests,
+        working_set=args.working_set, slots=args.slots,
+        backend=args.backend, include_naive=not args.no_naive)
+
+
+if __name__ == "__main__":
+    main()

@@ -2,8 +2,11 @@
 from repro.core.graph import Graph
 from repro.core.partition import PartitionedGraph, PartitionStats, partition_graph
 from repro.core.aggregate import (
+    AGGREGATE_BACKENDS,
     BlockedGraph,
     ReduceOp,
+    active_aggregate_backend,
+    aggregate_backend,
     aggregate_blocked,
     aggregate_edges,
     attention_aggregate_blocked,

@@ -17,6 +17,7 @@ coherent summation, the trailing 1/n MR, and the optical comparator).
 
 from __future__ import annotations
 
+import contextlib
 import enum
 from typing import NamedTuple
 
@@ -31,6 +32,39 @@ class ReduceOp(str, enum.Enum):
     SUM = "sum"
     MEAN = "mean"
     MAX = "max"
+
+
+# ---------------------------------------------------------------------------
+# Backend selection: "jnp" (einsum/segment ops, the oracle) or "pallas" (the
+# block_spmm kernel in repro.kernels; interpret mode on CPU).  The serving
+# engine flips this per-executor; layers and models stay backend-agnostic.
+# ---------------------------------------------------------------------------
+
+_BACKEND_STACK: list[str] = ["jnp"]
+AGGREGATE_BACKENDS = ("jnp", "pallas")
+
+
+def active_aggregate_backend() -> str:
+    return _BACKEND_STACK[-1]
+
+
+@contextlib.contextmanager
+def aggregate_backend(name: str):
+    """Route ``aggregate_blocked`` SUM/MEAN through the chosen backend.
+
+    The selection is read at trace time, so wrapping a jit'd call site routes
+    every blocked aggregation inside that trace.  MAX always uses the jnp
+    path (the Pallas kernel is an SpMM; the optical comparator has no MXU
+    analogue).
+    """
+    if name not in AGGREGATE_BACKENDS:
+        raise ValueError(f"unknown aggregate backend '{name}'; "
+                         f"expected one of {AGGREGATE_BACKENDS}")
+    _BACKEND_STACK.append(name)
+    try:
+        yield
+    finally:
+        _BACKEND_STACK.pop()
 
 
 class BlockedGraph(NamedTuple):
@@ -112,6 +146,30 @@ def aggregate_blocked(
       [G_dst * V, F] aggregated features (padded rows included).
     """
     f = feat_padded.shape[-1]
+
+    def mean_normalize(out):
+        # Degree = sum of tile entries: multiplicities of duplicate edges
+        # were accumulated into the tile values at partition time, so this
+        # matches the edge-list backend's per-edge count exactly.  Shared by
+        # both backends — their MEAN semantics must never drift apart.
+        deg_partial = bg.blocks.sum(axis=2).astype(out.dtype)  # [B,V]
+        deg = jax.ops.segment_sum(deg_partial, bg.block_row,
+                                  num_segments=bg.num_dst_groups)
+        deg = deg.reshape(bg.num_dst_groups * bg.v)
+        return out / jnp.maximum(deg, 1.0)[:, None]
+
+    if active_aggregate_backend() == "pallas" and reduce in (ReduceOp.SUM,
+                                                             ReduceOp.MEAN):
+        # Lazy import: kernels.ops imports core.partition; importing it at
+        # module scope would cycle through core/__init__.
+        from repro.kernels.ops import block_spmm_padded
+
+        out = block_spmm_padded(bg.blocks, bg.block_row, bg.block_col,
+                                feat_padded, bg.num_dst_groups)
+        if reduce == ReduceOp.MEAN:
+            out = mean_normalize(out)
+        return out.astype(feat_padded.dtype)
+
     src_tiles = feat_padded.reshape(bg.num_src_groups, bg.n, f)[bg.block_col]  # [B,N,F]
 
     if reduce in (ReduceOp.SUM, ReduceOp.MEAN):
@@ -121,13 +179,7 @@ def aggregate_blocked(
         out = jax.ops.segment_sum(partial, bg.block_row, num_segments=bg.num_dst_groups)
         out = out.reshape(bg.num_dst_groups * bg.v, f)
         if reduce == ReduceOp.MEAN:
-            # Degree = sum of tile entries: multiplicities of duplicate edges
-            # were accumulated into the tile values at partition time, so this
-            # matches the edge-list backend's per-edge count exactly.
-            deg_partial = bg.blocks.sum(axis=2).astype(out.dtype)  # [B,V]
-            deg = jax.ops.segment_sum(deg_partial, bg.block_row, num_segments=bg.num_dst_groups)
-            deg = deg.reshape(bg.num_dst_groups * bg.v)
-            out = out / jnp.maximum(deg, 1.0)[:, None]
+            out = mean_normalize(out)
         return out.astype(feat_padded.dtype)
 
     if reduce == ReduceOp.MAX:

@@ -173,6 +173,14 @@ def partition_graph(
         mean_neighbors=float(deg.mean()) if nv else 0.0,
         tile_density=nnz_inside,
     )
+    if num_blocks == 0:
+        # Zero-edge graph: ``blocks`` already holds one all-zero placeholder
+        # tile; give it matching (row, col) coordinates so the array triple
+        # stays shape-consistent for the blocked backends (row_ptr and the
+        # occupancy stats still report zero non-zero tiles).
+        block_row = np.zeros(1, dtype=np.int32)
+        block_col = np.zeros(1, dtype=np.int32)
+
     if not sort_rows:
         # Degree-descending schedule (workload-balancing experiments).
         order = np.argsort(-tiles_per_row[block_row], kind="stable")

@@ -36,7 +36,7 @@ class ShardingPlan:
 
     def tree_for(self, tree):
         """Rebuild a pytree of NamedShardings matching ``tree``."""
-        flat, treedef = jax.tree.flatten_with_path(tree)
+        flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
         out = [self.shardings[_path_str(p)] for p, _ in flat]
         return jax.tree.unflatten(treedef, out)
 
@@ -139,7 +139,7 @@ def auto_shard_params(param_tree, mesh: Mesh, *, fsdp_over_pod: bool = False,
         fsdp_axes: tuple | str = ("pod", "data")
     else:
         fsdp_axes = "data"
-    flat, _ = jax.tree.flatten_with_path(param_tree)
+    flat, _ = jax.tree_util.tree_flatten_with_path(param_tree)
     shardings = {}
     fallbacks = []
     for path, leaf in flat:
@@ -190,7 +190,7 @@ def auto_shard_cache(cache_tree, batch_size: int, mesh: Mesh):
         return NamedSharding(
             mesh, cache_spec(tuple(leaf.shape), batch_size, mesh,
                              _path_str(path)))
-    flat, treedef = jax.tree.flatten_with_path(cache_tree)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_tree)
     return jax.tree.unflatten(treedef, [one(p, l) for p, l in flat])
 
 
@@ -198,7 +198,7 @@ def estimate_bytes_per_device(tree, plan: ShardingPlan, mesh: Mesh,
                               optimizer_multiplier: float = 0.0) -> float:
     """Parameter bytes per device under the plan (+ optional optimizer
     overhead expressed as a multiple of fp32 param bytes)."""
-    flat, _ = jax.tree.flatten_with_path(tree)
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
     total = 0.0
     for path, leaf in flat:
         sh = plan.shardings[_path_str(path)]

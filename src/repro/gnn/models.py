@@ -144,16 +144,28 @@ class GIN:
         pooled = h.sum(axis=0)
         return pooled @ p["out"]["w"] + p["out"]["b"]
 
-    def apply_blocked(self, p, bg, feat_padded, quantized=False,
-                      node_mask=None):
+    def node_embed_blocked(self, p, bg, feat_padded, quantized=False):
+        """Blocked node embeddings [G_dst*V, hidden] (pre-readout)."""
         h = jax.nn.relu(GINConv.apply_blocked(p["l1"], bg, feat_padded, quantized))
         h = _redistribute(h, bg)
-        h = GINConv.apply_blocked(p["l2"], bg, h, quantized)
-        h = h[:bg.num_nodes]
+        return GINConv.apply_blocked(p["l2"], bg, h, quantized)
+
+    def readout(self, p, h_nodes, node_mask=None):
+        """Sum-pool valid node embeddings [Nv, hidden] -> class logits.
+
+        Kept separate from the blocked forward so a serving engine can run
+        the shape-bucketed embedding batch-wide and the readout per request
+        at its true node count (the fp32 sum's value depends on row count).
+        """
         if node_mask is not None:
-            h = h * node_mask[:bg.num_nodes, None]
-        pooled = h.sum(axis=0)
+            h_nodes = h_nodes * node_mask[: h_nodes.shape[0], None]
+        pooled = h_nodes.sum(axis=0)
         return pooled @ p["out"]["w"] + p["out"]["b"]
+
+    def apply_blocked(self, p, bg, feat_padded, quantized=False,
+                      node_mask=None):
+        h = self.node_embed_blocked(p, bg, feat_padded, quantized)
+        return self.readout(p, h[:bg.num_nodes], node_mask)
 
 
 def _redistribute(h_dst: jax.Array, bg: BlockedGraph) -> jax.Array:

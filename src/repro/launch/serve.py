@@ -5,7 +5,9 @@ each engine tick either (a) prefills the next waiting request into a free
 cache slot or (b) runs one batched decode step for all active slots.
 Finished sequences (EOS or max_tokens) free their slot.  This is the
 engine a cluster front-end would wrap with RPC; here it is driven
-synthetically (examples/serve_gnn.py drives the paper-side GNN analogue).
+synthetically.  The paper-side GNN analogue is
+``repro.serving.GnnServeEngine`` (slot-based batching over shape-bucketed
+blocked forwards), driven by examples/serve_gnn.py.
 
 CLI:
   PYTHONPATH=src python -m repro.launch.serve --arch chatglm3-6b \

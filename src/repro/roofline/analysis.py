@@ -135,6 +135,9 @@ class CellMetrics:
 
 def metrics_from_compiled(compiled) -> CellMetrics:
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        # Older jax returns one cost dict per program.
+        ca = ca[0] if ca else {}
     ma = compiled.memory_analysis()
     text = compiled.as_text()
     return CellMetrics(

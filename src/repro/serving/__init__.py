@@ -1,0 +1,18 @@
+# Bucketed continuous-batching GNN serving (the paper's deployment story:
+# offline preprocessing feeding the blocked aggregate/combine/update pipe).
+from repro.serving.bucketing import (
+    Bucket,
+    bucket_for,
+    next_pow2,
+    node_mask_for_bucket,
+    pad_features_to_bucket,
+    pad_partition_to_bucket,
+)
+from repro.serving.cache import (
+    CacheEntry,
+    CacheStats,
+    PreprocessCache,
+    graph_content_hash,
+)
+from repro.serving.engine import GnnServeEngine, gcn_prepare
+from repro.serving.report import RequestRecord, ServeReport, build_report

@@ -1,0 +1,119 @@
+"""Shape bucketing: bound the number of distinct jit traces under load.
+
+Every distinct ``(num_blocks, num_dst_groups, num_src_groups)`` triple is a
+distinct static shape for the blocked forward, and therefore a fresh jit
+trace — unacceptable when serving arbitrary graphs.  We round each dimension
+up to its power-of-two bucket and pad with all-zero tiles:
+
+  * padding tiles sit at ``(row, col) = (G_dst_p - 1, G_src_p - 1)``, which
+    keeps ``block_row`` non-decreasing (the CSR-sortedness the Pallas kernel
+    requires) and keeps every index in range;
+  * all-zero tiles are exact no-ops for SUM/MEAN (they contribute 0 to both
+    the numerator and the degree) and for MAX/attention (the ``blocks != 0``
+    mask excludes them), so bucketed outputs match the unpadded forward
+    value-for-value on real rows;
+  * padded destination/source rows carry zeros (or masked garbage) that
+    callers slice off per request.
+
+With power-of-two rounding the number of traces for graphs up to B blocks
+and G groups is O(log B * log^2 G) per model — in practice a handful.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.partition import PartitionedGraph
+
+
+def next_pow2(x: int) -> int:
+    """Smallest power of two >= x (1 for x <= 1)."""
+    if x <= 1:
+        return 1
+    return 1 << (int(x) - 1).bit_length()
+
+
+@dataclasses.dataclass(frozen=True)
+class Bucket:
+    """A padded static shape class for the blocked forward."""
+
+    num_blocks: int
+    num_dst_groups: int
+    num_src_groups: int
+    v: int
+    n: int
+
+    @property
+    def padded_dst(self) -> int:
+        return self.num_dst_groups * self.v
+
+    @property
+    def padded_src(self) -> int:
+        return self.num_src_groups * self.n
+
+    def describe(self) -> str:
+        return (f"B{self.num_blocks}xD{self.num_dst_groups}"
+                f"xS{self.num_src_groups}(v{self.v},n{self.n})")
+
+
+def bucket_for(pg: PartitionedGraph) -> Bucket:
+    """The power-of-two bucket a partitioned graph lands in."""
+    return Bucket(
+        num_blocks=next_pow2(pg.blocks.shape[0]),
+        num_dst_groups=next_pow2(pg.num_dst_groups),
+        num_src_groups=next_pow2(pg.num_src_groups),
+        v=pg.v,
+        n=pg.n,
+    )
+
+
+def pad_partition_to_bucket(
+    pg: PartitionedGraph, bucket: Bucket
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Pad (blocks, block_row, block_col) with zero tiles up to the bucket.
+
+    Returns numpy arrays of shapes ([Bp, V, N], [Bp], [Bp]).
+    """
+    b = pg.blocks.shape[0]
+    if (b > bucket.num_blocks
+            or pg.num_dst_groups > bucket.num_dst_groups
+            or pg.num_src_groups > bucket.num_src_groups
+            or (pg.v, pg.n) != (bucket.v, bucket.n)):
+        raise ValueError(f"graph does not fit bucket {bucket.describe()}")
+    pad = bucket.num_blocks - b
+    blocks = np.concatenate(
+        [pg.blocks, np.zeros((pad, pg.v, pg.n), pg.blocks.dtype)], axis=0)
+    row = np.concatenate(
+        [pg.block_row,
+         np.full(pad, bucket.num_dst_groups - 1, np.int32)]).astype(np.int32)
+    col = np.concatenate(
+        [pg.block_col,
+         np.full(pad, bucket.num_src_groups - 1, np.int32)]).astype(np.int32)
+    return blocks, row, col
+
+
+def pad_features_to_bucket(
+    pg: PartitionedGraph, bucket: Bucket, feat: np.ndarray
+) -> np.ndarray:
+    """Pad [Nv, F] features to the bucket's source row count [Gs_p * N, F]."""
+    rows = bucket.padded_src
+    if feat.shape[0] > rows:
+        raise ValueError("feature matrix larger than bucket source rows")
+    out = np.zeros((rows, feat.shape[1]), np.float32)
+    out[: feat.shape[0]] = feat
+    return out
+
+
+def node_mask_for_bucket(pg: PartitionedGraph, bucket: Bucket) -> np.ndarray:
+    """[min(Gd_p*V, Gs_p*N)] 1/0 validity mask over the executor's node rows.
+
+    The executor treats ``min(padded_dst, padded_src)`` as its static node
+    count (see engine._make_executor); the mask zeroes padding rows for
+    graph-level readouts.
+    """
+    rows = min(bucket.padded_dst, bucket.padded_src)
+    mask = np.zeros((rows,), np.float32)
+    mask[: pg.num_nodes] = 1.0
+    return mask

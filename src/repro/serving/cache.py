@@ -1,0 +1,121 @@
+"""Content-addressed BlockedGraph preprocessing cache.
+
+GHOST's partition matrix and fetch order are generated *offline* (paper
+Section 3.4.1); a serving deployment therefore should pay the partitioning
+cost once per distinct graph, not once per request.  The cache key is a
+content hash of everything the partitioner consumes — edge list, node count,
+(V, N) group sizes, and optional per-edge weights — so two requests carrying
+the same structure (regardless of features, which only enter at execute
+time) share one preprocessing artifact.
+
+Entries are LRU-evicted.  Each entry also carries a free-form ``extras``
+dict that the engine uses to memoize downstream per-structure artifacts
+(bucket-padded tile arrays, analytic hardware cost), all invariant under the
+same key.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from collections import OrderedDict
+from typing import Optional
+
+import numpy as np
+
+from repro.core.graph import Graph
+from repro.core.partition import PartitionedGraph, partition_graph
+
+
+def graph_content_hash(
+    graph: Graph,
+    v: int,
+    n: int,
+    edge_weights: Optional[np.ndarray] = None,
+    salt: str = "",
+) -> str:
+    """Hash the partitioner's inputs: structure + group sizes (+ weights).
+
+    ``salt`` distinguishes deterministic structure transforms (e.g. GCN
+    self-loops + symmetric normalization) applied on cache miss, so the raw
+    graph can be hashed without re-running the transform on every request.
+    """
+    h = hashlib.sha1()
+    h.update(salt.encode())
+    h.update(np.int64(graph.num_nodes).tobytes())
+    h.update(np.int64(v).tobytes())
+    h.update(np.int64(n).tobytes())
+    h.update(np.ascontiguousarray(graph.edge_src, dtype=np.int32).tobytes())
+    h.update(np.ascontiguousarray(graph.edge_dst, dtype=np.int32).tobytes())
+    if edge_weights is not None:
+        h.update(np.ascontiguousarray(edge_weights, dtype=np.float32).tobytes())
+    return h.hexdigest()
+
+
+@dataclasses.dataclass
+class CacheEntry:
+    key: str
+    pg: PartitionedGraph
+    extras: dict = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+
+class PreprocessCache:
+    """LRU cache: content hash -> partitioned (blocked) graph."""
+
+    def __init__(self, capacity: int = 256):
+        if capacity < 1:
+            raise ValueError("cache capacity must be >= 1")
+        self.capacity = capacity
+        self._entries: OrderedDict[str, CacheEntry] = OrderedDict()
+        self.stats = CacheStats()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def get_or_partition(
+        self,
+        graph: Graph,
+        v: int,
+        n: int,
+        edge_weights: Optional[np.ndarray] = None,
+        transform=None,
+        salt: str = "",
+    ) -> tuple[CacheEntry, bool]:
+        """Return (entry, was_hit); partitions and inserts on miss.
+
+        ``transform``, if given, maps the raw graph to
+        ``(graph, edge_weights)`` on miss only (its identity must be encoded
+        in ``salt`` so distinct transforms don't collide on the same raw
+        structure).  The transformed graph is kept on the entry for
+        consumers that model the executed (not the submitted) structure.
+        """
+        key = graph_content_hash(graph, v, n, edge_weights, salt)
+        entry = self._entries.get(key)
+        if entry is not None:
+            self.stats.hits += 1
+            self._entries.move_to_end(key)
+            return entry, True
+        self.stats.misses += 1
+        executed = graph
+        if transform is not None:
+            executed, edge_weights = transform(graph)
+        pg = partition_graph(executed, v=v, n=n, edge_weights=edge_weights)
+        entry = CacheEntry(key=key, pg=pg)
+        entry.extras["graph"] = executed
+        self._entries[key] = entry
+        if len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+            self.stats.evictions += 1
+        return entry, False

@@ -1,0 +1,108 @@
+"""Served-throughput accounting: wall-clock + analytic GHOST hardware cost.
+
+The engine records one ``RequestRecord`` per served request; ``ServeReport``
+folds them into the numbers a deployment dashboard (or the serving
+benchmark's JSON) wants: functional req/s on this host, latency percentiles,
+preprocessing-cache effectiveness, how many jit traces the bucketing policy
+actually paid, and the accumulated GHOST latency/energy from the analytic
+model (photonic/perf.py) — i.e. what the same request stream would cost on
+the accelerator.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class RequestRecord:
+    rid: int
+    num_nodes: int
+    num_edges: int
+    bucket: str
+    cache_hit: bool
+    latency_s: float           # wall time: submit -> result materialized
+    batch_size: int            # real requests in the batch that served it
+    hw_latency_s: float = 0.0  # analytic GHOST inference latency
+    hw_energy_j: float = 0.0
+
+
+def _percentile(values, q: float) -> float:
+    return float(np.percentile(np.asarray(values, np.float64), q)) if values else 0.0
+
+
+@dataclasses.dataclass
+class ServeReport:
+    requests: int
+    wall_s: float
+    req_per_s: float
+    p50_latency_ms: float
+    p99_latency_ms: float
+    mean_batch_size: float
+    cache_hits: int
+    cache_misses: int
+    cache_hit_rate: float
+    traces_compiled: int
+    buckets: dict            # bucket description -> requests served in it
+    backend: str
+    hw_latency_s: float
+    hw_energy_j: float
+    hw_req_per_s: float
+    hw_avg_power_w: float
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self), indent=2, default=float)
+
+    def pretty(self) -> str:
+        return (
+            f"served {self.requests} requests in {self.wall_s:.2f}s "
+            f"({self.req_per_s:.1f} req/s functional, backend={self.backend})\n"
+            f"  latency p50={self.p50_latency_ms:.1f}ms "
+            f"p99={self.p99_latency_ms:.1f}ms, "
+            f"mean batch {self.mean_batch_size:.1f}\n"
+            f"  preprocess cache: {self.cache_hits} hits / "
+            f"{self.cache_misses} misses (hit rate {self.cache_hit_rate:.2f})\n"
+            f"  jit traces compiled: {self.traces_compiled} "
+            f"across buckets {self.buckets}\n"
+            f"  GHOST hardware estimate: {self.hw_latency_s * 1e6:.1f} us, "
+            f"{self.hw_energy_j * 1e3:.3f} mJ, {self.hw_req_per_s:.0f} req/s, "
+            f"avg power {self.hw_avg_power_w:.1f} W"
+        )
+
+
+def build_report(
+    records: list[RequestRecord],
+    wall_s: float,
+    cache_stats,
+    traces_compiled: int,
+    backend: str,
+) -> ServeReport:
+    lats = [r.latency_s for r in records]
+    buckets: dict[str, int] = {}
+    for r in records:
+        buckets[r.bucket] = buckets.get(r.bucket, 0) + 1
+    hw_lat = sum(r.hw_latency_s for r in records)
+    hw_e = sum(r.hw_energy_j for r in records)
+    return ServeReport(
+        requests=len(records),
+        wall_s=wall_s,
+        req_per_s=len(records) / wall_s if wall_s > 0 else 0.0,
+        p50_latency_ms=_percentile(lats, 50) * 1e3,
+        p99_latency_ms=_percentile(lats, 99) * 1e3,
+        mean_batch_size=(float(np.mean([r.batch_size for r in records]))
+                         if records else 0.0),
+        cache_hits=cache_stats.hits,
+        cache_misses=cache_stats.misses,
+        cache_hit_rate=cache_stats.hit_rate,
+        traces_compiled=traces_compiled,
+        buckets=buckets,
+        backend=backend,
+        hw_latency_s=hw_lat,
+        hw_energy_j=hw_e,
+        hw_req_per_s=len(records) / hw_lat if hw_lat > 0 else 0.0,
+        hw_avg_power_w=hw_e / hw_lat if hw_lat > 0 else 0.0,
+    )

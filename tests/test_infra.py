@@ -116,8 +116,8 @@ def test_checkpoint_shape_mismatch_raises(tmp_path):
 def test_checkpoint_elastic_restore_resharding(tmp_path):
     """Restore under an explicit sharding tree (the elastic-rescale path)."""
     from jax.sharding import NamedSharding, PartitionSpec as P
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_debug_mesh
+    mesh = make_debug_mesh((1,), ("data",))
     ck = Checkpointer(str(tmp_path))
     tree = {"w": jnp.arange(8, dtype=jnp.float32)}
     ck.save(1, tree)

@@ -5,7 +5,7 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, strategies as st
+from _hypothesis_compat import given, st
 
 from repro.photonic import noise as nz
 

@@ -3,7 +3,7 @@ the occupancy stats drive the zero-block skip accounting."""
 
 import numpy as np
 import pytest
-from hypothesis import given, strategies as st
+from _hypothesis_compat import given, st
 
 from repro.core import Graph, partition_graph
 

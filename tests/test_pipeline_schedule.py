@@ -1,0 +1,107 @@
+"""Invariants of the two-level pipelining model (core/pipeline.py).
+
+The analytic flow-shop schedule must satisfy the classic bounds regardless
+of the load matrix: pipelining can only help, nothing can beat the
+busiest stage, and turning both levels off is exactly the sequential sum.
+"""
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, st
+from repro.core.pipeline import (
+    StageLoad,
+    grouped_latency,
+    pipelined_latency,
+    sequential_latency,
+)
+
+STAGE_NAMES = ("reduce", "transform", "update")
+
+
+def random_loads(seed, max_groups=6, max_stages=3):
+    rng = np.random.default_rng(seed)
+    groups = int(rng.integers(1, max_groups + 1))
+    stages = int(rng.integers(1, max_stages + 1))
+    out = []
+    for _ in range(groups):
+        out.append([
+            # tiles >= 1, matching the domain perf.py produces (every stage
+            # of a scheduled group has at least one mapping); zero-tile
+            # stages legitimately pay pipeline fill time under PP.
+            StageLoad(STAGE_NAMES[s % len(STAGE_NAMES)],
+                      int(rng.integers(1, 12)),
+                      float(rng.random()) * 2.0)
+            for s in range(stages)
+        ])
+    return out
+
+
+@given(st.integers(0, 500))
+def test_pipelining_never_hurts(seed):
+    loads = random_loads(seed)
+    full = grouped_latency(loads, pipeline_within=True, pipeline_across=True)
+    within_only = grouped_latency(loads, pipeline_within=True,
+                                  pipeline_across=False)
+    across_only = grouped_latency(loads, pipeline_within=False,
+                                  pipeline_across=True)
+    none = grouped_latency(loads, pipeline_within=False,
+                           pipeline_across=False)
+    eps = 1e-9
+    assert full <= within_only + eps
+    assert full <= across_only + eps
+    assert within_only <= none + eps
+    assert across_only <= none + eps
+
+
+@given(st.integers(0, 500))
+def test_latency_lower_bounded_by_busiest_stage(seed):
+    """No schedule can finish before its busiest stage unit finishes all its
+    work — each stage is a single dedicated hardware unit."""
+    loads = random_loads(seed)
+    num_stages = max(len(g) for g in loads)
+    stage_work = [
+        sum(g[s].total for g in loads if s < len(g))
+        for s in range(num_stages)
+    ]
+    bound = max(stage_work)
+    for within in (False, True):
+        for across in (False, True):
+            lat = grouped_latency(loads, pipeline_within=within,
+                                  pipeline_across=across)
+            assert lat >= bound - 1e-9
+
+
+@given(st.integers(0, 500))
+def test_no_pp_equals_sequential_sum_over_groups(seed):
+    """Both pipelining levels off == the paper's no-PP baseline: every group
+    drains fully, stage by stage."""
+    loads = random_loads(seed)
+    none = grouped_latency(loads, pipeline_within=False,
+                           pipeline_across=False)
+    expected = sum(sequential_latency(g) for g in loads)
+    assert none == pytest.approx(expected, rel=1e-12)
+
+
+def test_single_group_pipelined_matches_grouped():
+    stages = [StageLoad("reduce", 4, 1.0), StageLoad("transform", 2, 0.5),
+              StageLoad("update", 1, 0.25)]
+    assert pipelined_latency(stages) == pytest.approx(
+        grouped_latency([stages], pipeline_within=True,
+                        pipeline_across=False))
+
+
+def test_pipelined_single_group_bounds():
+    """Within-group pipelining sits between the busiest stage and the sum."""
+    stages = [StageLoad("reduce", 5, 0.7), StageLoad("transform", 3, 1.1),
+              StageLoad("update", 2, 0.3)]
+    lat = pipelined_latency(stages)
+    assert lat <= sequential_latency(stages)
+    assert lat >= max(s.total for s in stages)
+
+
+def test_empty_and_zero_loads():
+    assert grouped_latency([]) == 0.0
+    zero = [[StageLoad("reduce", 0, 1.0), StageLoad("transform", 0, 1.0)]]
+    assert grouped_latency(zero, pipeline_within=False,
+                           pipeline_across=False) == 0.0

@@ -3,8 +3,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, strategies as st
-from hypothesis.extra import numpy as hnp
+from _hypothesis_compat import given, hnp, st
 
 from repro.photonic.quant import (
     QuantConfig,

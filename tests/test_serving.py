@@ -1,0 +1,279 @@
+"""Bucketed continuous-batching serving engine (repro.serving).
+
+The load-bearing claims:
+  * per-request engine outputs == the unbatched blocked forward, exactly
+    (fp32 value-for-value), on both aggregation backends;
+  * the preprocessing cache actually deduplicates partitioning work;
+  * shape bucketing bounds the jit trace count;
+  * bucket padding (zero tiles, padded groups) is numerically inert.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    Graph,
+    ReduceOp,
+    aggregate_backend,
+    aggregate_blocked,
+    partition_graph,
+    to_blocked,
+)
+from repro.core.aggregate import BlockedGraph
+from repro.gnn import build_model
+from repro.photonic.perf import GhostConfig, GnnModelSpec
+from repro.serving import (
+    GnnServeEngine,
+    PreprocessCache,
+    bucket_for,
+    gcn_prepare,
+    graph_content_hash,
+    next_pow2,
+    pad_features_to_bucket,
+    pad_partition_to_bucket,
+)
+
+
+def make_graph(seed, nv=None, ne=None, f=7, labeled=False):
+    rng = np.random.default_rng(seed)
+    nv = nv or int(rng.integers(6, 70))
+    ne = ne or int(rng.integers(1, 200))
+    g = Graph(
+        edge_src=rng.integers(0, nv, ne).astype(np.int32),
+        edge_dst=rng.integers(0, nv, ne).astype(np.int32),
+        node_feat=rng.standard_normal((nv, f)).astype(np.float32),
+    ).validate()
+    if labeled:
+        g.graph_label = int(rng.integers(0, 2))
+    return g
+
+
+# ---------------------------------------------------------------------------
+# Bucketing primitives.
+# ---------------------------------------------------------------------------
+
+
+def test_next_pow2():
+    assert [next_pow2(x) for x in (0, 1, 2, 3, 4, 5, 17, 64)] == \
+        [1, 1, 2, 4, 4, 8, 32, 64]
+
+
+@pytest.mark.parametrize("reduce", [ReduceOp.SUM, ReduceOp.MEAN, ReduceOp.MAX])
+def test_bucket_padding_is_numerically_inert(reduce):
+    """Aggregation over bucket-padded tiles == unpadded, on real rows."""
+    g = make_graph(3, nv=45, ne=160)
+    pg = partition_graph(g, v=8, n=8)
+    bucket = bucket_for(pg)
+    blocks, row, col = pad_partition_to_bucket(pg, bucket)
+    assert blocks.shape[0] == bucket.num_blocks
+    assert (np.diff(row) >= 0).all()  # CSR sortedness preserved
+
+    featp = jnp.asarray(pg.pad_features(g.node_feat))
+    featb = jnp.asarray(pad_features_to_bucket(pg, bucket, g.node_feat))
+    ref = aggregate_blocked(to_blocked(pg), featp, reduce)
+    bg = BlockedGraph(
+        blocks=jnp.asarray(blocks), block_row=jnp.asarray(row),
+        block_col=jnp.asarray(col),
+        num_dst_groups=bucket.num_dst_groups,
+        num_src_groups=bucket.num_src_groups,
+        v=pg.v, n=pg.n, num_nodes=g.num_nodes)
+    got = aggregate_blocked(bg, featb, reduce)
+    np.testing.assert_array_equal(np.asarray(got)[: g.num_nodes],
+                                  np.asarray(ref)[: g.num_nodes])
+
+
+# ---------------------------------------------------------------------------
+# Preprocess cache.
+# ---------------------------------------------------------------------------
+
+
+def test_content_hash_keys_structure_not_features():
+    g1 = make_graph(0, nv=20, ne=40)
+    g2 = Graph(edge_src=g1.edge_src.copy(), edge_dst=g1.edge_dst.copy(),
+               node_feat=np.zeros_like(g1.node_feat)).validate()
+    assert graph_content_hash(g1, 4, 4) == graph_content_hash(g2, 4, 4)
+    assert graph_content_hash(g1, 4, 4) != graph_content_hash(g1, 8, 4)
+    assert graph_content_hash(g1, 4, 4) != graph_content_hash(g1, 4, 4,
+                                                              salt="gcn")
+
+
+def test_cache_hits_and_lru_eviction():
+    cache = PreprocessCache(capacity=2)
+    g1, g2, g3 = (make_graph(s, nv=12, ne=20) for s in range(3))
+    _, hit = cache.get_or_partition(g1, 4, 4)
+    assert not hit
+    _, hit = cache.get_or_partition(g1, 4, 4)
+    assert hit
+    cache.get_or_partition(g2, 4, 4)
+    cache.get_or_partition(g3, 4, 4)      # evicts g1 (LRU)
+    assert cache.stats.evictions == 1
+    _, hit = cache.get_or_partition(g1, 4, 4)
+    assert not hit
+    assert len(cache) == 2
+
+
+def test_cache_transform_runs_once():
+    calls = []
+
+    def prep(g):
+        calls.append(1)
+        return gcn_prepare(g)
+
+    cache = PreprocessCache(capacity=8)
+    g = make_graph(1, nv=15, ne=30)
+    e1, _ = cache.get_or_partition(g, 4, 4, transform=prep, salt="gcn")
+    e2, hit = cache.get_or_partition(g, 4, 4, transform=prep, salt="gcn")
+    assert hit and e1 is e2 and len(calls) == 1
+    # The entry's pg reflects the transformed (self-loop) structure.
+    assert e1.pg.stats.num_edges > g.num_edges
+
+
+# ---------------------------------------------------------------------------
+# Engine end-to-end.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_engine_matches_unbatched_blocked_forward_exactly(backend):
+    graphs = [make_graph(s) for s in range(6)]
+    graphs += graphs[:3]  # repeats -> cache hits
+    model = build_model("gcn", 7, 3, hidden=8)
+    params = model.init(jax.random.PRNGKey(0))
+    cfg = GhostConfig(v=8, n=8)
+    eng = GnnServeEngine(model, params, task="node", cfg=cfg, slots=4,
+                         backend=backend, prepare_fn=gcn_prepare,
+                         spec=GnnModelSpec.gcn(7, 8, 3))
+    rep = eng.run(graphs)
+
+    assert rep.requests == len(graphs)
+    assert rep.cache_hit_rate > 0
+    assert rep.hw_latency_s > 0 and rep.hw_energy_j > 0
+    for i, g in enumerate(graphs):
+        g2, w = gcn_prepare(g)
+        pg = partition_graph(g2, v=8, n=8, edge_weights=w)
+        featp = jnp.asarray(pg.pad_features(g.node_feat))
+        with aggregate_backend(backend):
+            ref = np.asarray(model.apply_blocked(params, to_blocked(pg),
+                                                 featp))[: g.num_nodes]
+        np.testing.assert_array_equal(eng.results[i], ref)
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_engine_graph_task_gin_exact(backend):
+    graphs = [make_graph(s, f=6, labeled=True) for s in range(5)]
+    model = build_model("gin", 6, 2, hidden=8, mlp_layers=2)
+    params = model.init(jax.random.PRNGKey(1))
+    cfg = GhostConfig(v=5, n=7)  # v != n exercises asymmetric padding
+    eng = GnnServeEngine(model, params, task="graph", cfg=cfg, slots=3,
+                         backend=backend)
+    eng.run(graphs)
+    for i, g in enumerate(graphs):
+        pg = partition_graph(g, v=5, n=7)
+        featp = jnp.asarray(pg.pad_features(g.node_feat))
+        with aggregate_backend(backend):
+            ref = np.asarray(model.apply_blocked(params, to_blocked(pg), featp))
+        np.testing.assert_array_equal(eng.results[i], ref)
+
+
+def test_engine_trace_count_is_bounded_by_buckets():
+    """Many distinct graphs, few shape buckets -> few traces."""
+    rng = np.random.default_rng(7)
+    graphs = [make_graph(int(rng.integers(0, 2**31)), nv=int(rng.integers(30, 64)),
+                         ne=int(rng.integers(40, 200)))
+              for _ in range(20)]
+    model = build_model("gcn", 7, 3, hidden=8)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = GnnServeEngine(model, params, task="node",
+                         cfg=GhostConfig(v=8, n=8), slots=4)
+    rep = eng.run(graphs)
+    assert rep.traces_compiled == len(rep.buckets)
+    assert rep.traces_compiled < len(graphs)
+    assert sum(rep.buckets.values()) == len(graphs)
+
+
+def test_engine_batches_share_buckets():
+    """Identical-shape requests ride the same executor call (batch > 1)."""
+    g = make_graph(11, nv=24, ne=50)
+    graphs = [g] * 6
+    model = build_model("sage", 7, 2, hidden=4)
+    params = model.init(jax.random.PRNGKey(2))
+    eng = GnnServeEngine(model, params, task="node",
+                         cfg=GhostConfig(v=8, n=8), slots=4)
+    rep = eng.run(graphs)
+    assert rep.traces_compiled == 1
+    assert rep.mean_batch_size > 1
+    assert rep.cache_hits == 5
+
+
+def test_engine_zero_edge_graph():
+    g = Graph(edge_src=np.zeros(0, np.int32), edge_dst=np.zeros(0, np.int32),
+              node_feat=np.random.default_rng(0)
+              .standard_normal((9, 6)).astype(np.float32)).validate()
+    model = build_model("gin", 6, 2, hidden=4, mlp_layers=2)
+    params = model.init(jax.random.PRNGKey(3))
+    eng = GnnServeEngine(model, params, task="graph",
+                         cfg=GhostConfig(v=4, n=4), slots=2, backend="pallas")
+    eng.run([g])
+    pg = partition_graph(g, v=4, n=4)
+    featp = jnp.asarray(pg.pad_features(g.node_feat))
+    with aggregate_backend("pallas"):
+        ref = np.asarray(model.apply_blocked(params, to_blocked(pg), featp))
+    np.testing.assert_array_equal(eng.results[0], ref)
+
+
+def test_engine_report_json_roundtrips():
+    import json
+
+    g = make_graph(5, nv=16, ne=30)
+    model = build_model("gcn", 7, 2, hidden=4)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = GnnServeEngine(model, params, task="node",
+                         cfg=GhostConfig(v=8, n=8), slots=2,
+                         spec=GnnModelSpec.gcn(7, 4, 2))
+    rep = eng.run([g, g, g])
+    doc = json.loads(rep.to_json())
+    for key in ("requests", "req_per_s", "p50_latency_ms", "p99_latency_ms",
+                "cache_hit_rate", "traces_compiled", "hw_latency_s"):
+        assert key in doc
+    assert doc["requests"] == 3
+    assert doc["cache_hit_rate"] == pytest.approx(2 / 3)
+
+
+def test_engine_rejects_bad_config():
+    model = build_model("gcn", 7, 2, hidden=4)
+    params = model.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError):
+        GnnServeEngine(model, params, task="edge")
+    with pytest.raises(ValueError):
+        GnnServeEngine(model, params, slots=0)
+    # Fail fast at construction, before any requests are queued:
+    with pytest.raises(ValueError):
+        GnnServeEngine(model, params, backend="nope")
+    with pytest.raises(ValueError):
+        GnnServeEngine(model, params, task="graph")  # GCN has no readout
+
+
+def test_engine_hw_cost_stable_under_eviction():
+    """Hardware accounting must not depend on cache-eviction timing."""
+    g = make_graph(21, nv=18, ne=36)
+    other = make_graph(22, nv=50, ne=120)
+    model = build_model("gcn", 7, 2, hidden=4)
+    params = model.init(jax.random.PRNGKey(0))
+
+    def run_with(capacity):
+        eng = GnnServeEngine(model, params, task="node",
+                             cfg=GhostConfig(v=8, n=8), slots=2,
+                             prepare_fn=gcn_prepare, cache_capacity=capacity,
+                             spec=GnnModelSpec.gcn(7, 4, 2))
+        # Submit g first, then evict it (capacity=1) before serving.
+        eng.submit(g)
+        eng.submit(other)
+        eng.drain()
+        return next(r for r in eng.records if r.rid == 0)
+
+    roomy = run_with(capacity=8)
+    evicted = run_with(capacity=1)
+    assert evicted.hw_latency_s == pytest.approx(roomy.hw_latency_s)
+    assert evicted.hw_energy_j == pytest.approx(roomy.hw_energy_j)
