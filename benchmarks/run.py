@@ -16,6 +16,9 @@ def main() -> None:
                     help="all (model x dataset) cells (slow on CPU)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset, e.g. fig8,table3")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: tiny-size serving benchmark only, so "
+                         "BENCH_JSON regressions are caught on every PR")
     args = ap.parse_args()
     quick = not args.full
 
@@ -42,6 +45,12 @@ def main() -> None:
         "kernels": kernel_micro.run,
         "serving": serving_throughput.run,
     }
+    if args.smoke:
+        if args.only or args.full:
+            ap.error("--smoke is a fixed tiny suite; drop --only/--full")
+        suites = {"serving": lambda quick: serving_throughput.run(
+            quick=True, requests=12, working_set=4, slots=4,
+            ticks=16, arrivals=4)}
     selected = (args.only.split(",") if args.only else list(suites))
 
     print("name,us_per_call,derived")

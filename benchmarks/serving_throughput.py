@@ -1,10 +1,20 @@
-"""Serving-throughput benchmark: the engine vs the naive per-request loop.
+"""Serving-throughput benchmark: engine vs naive loop, FIFO vs occupancy.
 
-Emits the usual ``name,us,derived`` CSV lines plus one BENCH JSON document
-(req/s, p50/p99 latency, cache hit rate, traces compiled) so the serving
-perf trajectory is machine-trackable across PRs:
+Two measurements, folded into one BENCH JSON document:
 
-  BENCH_JSON {"bench": "serving_throughput", ...}
+  1. Single-model closed loop (engine vs the naive re-partition-per-request
+     baseline) — the PR 3 numbers, kept for trend continuity.
+  2. Mixed-catalog open loop: GCN+GAT+SAGE at two feature dims behind one
+     engine with a bounded waiting queue, driven by a skewed arrival
+     process for a fixed tick budget.  The same trace runs under the FIFO
+     and the occupancy-aware scheduler (both engines pre-warmed so jit
+     compilation stays out of the timed window); occupancy forms fuller
+     batches and therefore serves more requests in the same budget, while
+     its age bound keeps the maximum queue wait finite.
+
+Emits the usual ``name,us,derived`` CSV lines plus:
+
+  BENCH_JSON {"bench": "serving_throughput", ..., "mixed": {...}}
 
 Run:  PYTHONPATH=src python benchmarks/serving_throughput.py [--requests N]
 """
@@ -33,11 +43,10 @@ from repro.photonic.perf import GhostConfig, GnnModelSpec
 from repro.serving import GnnServeEngine
 
 
-def _request_stream(num_requests: int, working_set: int, f: int,
-                    seed: int = 0) -> list[Graph]:
+def _graph_pool(count: int, f: int, seed: int) -> list[Graph]:
     rng = np.random.default_rng(seed)
     pool = []
-    for _ in range(working_set):
+    for _ in range(count):
         nv = int(rng.integers(24, 96))
         ne = int(rng.integers(2 * nv, 6 * nv))
         pool.append(Graph(
@@ -45,6 +54,13 @@ def _request_stream(num_requests: int, working_set: int, f: int,
             edge_dst=rng.integers(0, nv, ne).astype(np.int32),
             node_feat=rng.standard_normal((nv, f)).astype(np.float32),
         ).validate())
+    return pool
+
+
+def _request_stream(num_requests: int, working_set: int, f: int,
+                    seed: int = 0) -> list[Graph]:
+    rng = np.random.default_rng(seed)
+    pool = _graph_pool(working_set, f, seed)
     return [pool[int(rng.integers(0, working_set))]
             for _ in range(num_requests)]
 
@@ -53,18 +69,132 @@ def _naive_loop(model, params, stream, cfg) -> float:
     """The pre-engine baseline: re-partition + fresh shapes every request."""
     import jax.numpy as jnp
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     for g in stream:
         pg = partition_graph(g, v=cfg.v, n=cfg.n)
         featp = jnp.asarray(pg.pad_features(g.node_feat))
         out = model.apply_blocked(params, to_blocked(pg), featp)
         jax.block_until_ready(out)
-    return time.time() - t0
+    return time.perf_counter() - t0
+
+
+# ---------------------------------------------------------------------------
+# Mixed catalog: GCN+GAT+SAGE at two feature dims, FIFO vs occupancy.
+# ---------------------------------------------------------------------------
+
+F_SMALL, F_LARGE = 8, 16
+CATALOG_WEIGHTS = {"gcn_f8": 0.6, "sage_f8": 0.2, "gat_f16": 0.2}
+
+
+def _build_catalog():
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    gcn = build_model("gcn", F_SMALL, 3, hidden=8)
+    sage = build_model("sage", F_SMALL, 3, hidden=8)
+    gat = build_model("gat", F_LARGE, 3, hidden=4, heads=2)
+    return {
+        "gcn_f8": (gcn, gcn.init(ks[0]), F_SMALL),
+        "sage_f8": (sage, sage.init(ks[1]), F_SMALL),
+        "gat_f16": (gat, gat.init(ks[2]), F_LARGE),
+    }
+
+
+def _mixed_schedule(num: int, pools: dict, seed: int = 1):
+    """Skewed arrival order: 60% of traffic hits the hot model."""
+    rng = np.random.default_rng(seed)
+    mids = list(CATALOG_WEIGHTS)
+    probs = np.array([CATALOG_WEIGHTS[m] for m in mids])
+    schedule = []
+    for _ in range(num):
+        mid = mids[int(rng.choice(len(mids), p=probs))]
+        pool = pools[mid]
+        schedule.append((mid, pool[int(rng.integers(0, len(pool)))]))
+    return schedule
+
+
+def _mixed_engine(scheduler: str, catalog, slots: int, backend: str,
+                  max_waiting: int) -> GnnServeEngine:
+    engine = GnnServeEngine(cfg=GhostConfig(), slots=slots, backend=backend,
+                            scheduler=scheduler, max_waiting=max_waiting)
+    for mid, (model, params, _f) in catalog.items():
+        engine.register(mid, model, params, task="node")
+    return engine
+
+
+def _open_loop(engine: GnnServeEngine, pools: dict, schedule,
+               ticks: int, arrivals_per_tick: int) -> dict:
+    """Warm up (compile every executor), then drive a fixed tick budget."""
+    for mid, pool in pools.items():
+        for g in pool:
+            # Drain per submission: keeps warm-up below any admission bound
+            # (a whole pool submitted back-to-back could exceed max_waiting).
+            engine.submit(mid, g)
+            engine.drain()
+    engine.reset_metrics()
+
+    si = 0
+    t0 = time.perf_counter()
+    for _ in range(ticks):
+        for _ in range(arrivals_per_tick):
+            if si < len(schedule):
+                mid, g = schedule[si]
+                si += 1
+                engine.try_submit(mid, g)
+        engine.step()
+    elapsed = time.perf_counter() - t0
+
+    rep = engine.report(elapsed)
+    return {
+        "scheduler": engine.scheduler.name,
+        "served": rep.requests,
+        "req_per_s": rep.req_per_s,
+        "mean_batch_size": rep.mean_batch_size,
+        "max_wait_ticks": rep.max_wait_ticks,
+        "admitted": rep.admitted,
+        "rejected": rep.rejected,
+        "per_model": rep.per_model,
+        "traces_compiled": rep.traces_compiled,
+    }
+
+
+def run_mixed(ticks: int, arrivals_per_tick: int, working_set: int,
+              slots: int, backend: str, max_waiting: int) -> dict:
+    pools = {
+        "gcn_f8": _graph_pool(working_set, F_SMALL, seed=10),
+        "sage_f8": _graph_pool(working_set, F_SMALL, seed=11),
+        "gat_f16": _graph_pool(working_set, F_LARGE, seed=12),
+    }
+    schedule = _mixed_schedule(ticks * arrivals_per_tick, pools)
+    catalog = _build_catalog()
+
+    results = {}
+    for scheduler in ("fifo", "occupancy"):
+        engine = _mixed_engine(scheduler, catalog, slots, backend,
+                               max_waiting)
+        results[scheduler] = _open_loop(engine, pools, schedule, ticks,
+                                        arrivals_per_tick)
+        emit(f"serving/mixed_{scheduler}",
+             0.0 if not results[scheduler]["served"] else
+             1e6 / results[scheduler]["req_per_s"],
+             f"served={results[scheduler]['served']};"
+             f"batch={results[scheduler]['mean_batch_size']:.2f};"
+             f"max_wait={results[scheduler]['max_wait_ticks']}")
+
+    fifo, occ = results["fifo"], results["occupancy"]
+    results["occupancy_vs_fifo_served"] = (
+        occ["served"] / fifo["served"] if fifo["served"] else 0.0)
+    results["occupancy_vs_fifo_req_per_s"] = (
+        occ["req_per_s"] / fifo["req_per_s"] if fifo["req_per_s"] else 0.0)
+    results["ticks"] = ticks
+    results["arrivals_per_tick"] = arrivals_per_tick
+    results["max_waiting"] = max_waiting
+    return results
 
 
 def run(quick: bool = True, requests: int | None = None,
         working_set: int = 10, slots: int = 8, backend: str = "jnp",
-        include_naive: bool = True) -> dict:
+        include_naive: bool = True, include_mixed: bool = True,
+        ticks: int | None = None, arrivals: int | None = None,
+        max_waiting: int = 64) -> dict:
     requests = requests or (32 if quick else 256)
     f, hidden, classes = 16, 16, 3
     stream = _request_stream(requests, working_set, f)
@@ -74,9 +204,9 @@ def run(quick: bool = True, requests: int | None = None,
     cfg = GhostConfig()
     spec = GnnModelSpec.gcn(f, hidden, classes)
 
-    engine = GnnServeEngine(model, params, task="node", cfg=cfg, spec=spec,
-                            slots=slots, backend=backend,
-                            dataset_name="synthetic")
+    engine = GnnServeEngine(cfg=cfg, slots=slots, backend=backend)
+    engine.register("gcn", model, params, task="node", spec=spec,
+                    dataset_name="synthetic")
     report = engine.run(stream)
     emit("serving/engine", report.wall_s / requests * 1e6,
          f"req_s={report.req_per_s:.1f};hit={report.cache_hit_rate:.2f};"
@@ -105,6 +235,12 @@ def run(quick: bool = True, requests: int | None = None,
         doc["naive_req_per_s"] = requests / naive_s
         doc["speedup_vs_naive"] = (report.req_per_s * naive_s / requests
                                    if naive_s > 0 else 0.0)
+    if include_mixed:
+        doc["mixed"] = run_mixed(
+            ticks=ticks or (48 if quick else 192),
+            arrivals_per_tick=arrivals or 8,
+            working_set=max(4, working_set // 2),
+            slots=slots, backend=backend, max_waiting=max_waiting)
     print("BENCH_JSON " + json.dumps(doc, default=float))
     return doc
 
@@ -118,13 +254,23 @@ def main():
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--no-naive", action="store_true",
                     help="skip the naive-loop baseline timing")
+    ap.add_argument("--no-mixed", action="store_true",
+                    help="skip the mixed-catalog FIFO-vs-occupancy trace")
+    ap.add_argument("--ticks", type=int, default=None,
+                    help="mixed-catalog open-loop tick budget")
+    ap.add_argument("--arrivals", type=int, default=None,
+                    help="request arrivals per tick in the mixed trace")
+    ap.add_argument("--max-waiting", type=int, default=64,
+                    help="admission bound for the mixed trace")
     args = ap.parse_args()
     if args.working_set < 1 or args.slots < 1 or (
             args.requests is not None and args.requests < 1):
         ap.error("--requests, --working-set and --slots must be >= 1")
     run(quick=not args.full, requests=args.requests,
         working_set=args.working_set, slots=args.slots,
-        backend=args.backend, include_naive=not args.no_naive)
+        backend=args.backend, include_naive=not args.no_naive,
+        include_mixed=not args.no_mixed, ticks=args.ticks,
+        arrivals=args.arrivals, max_waiting=args.max_waiting)
 
 
 if __name__ == "__main__":

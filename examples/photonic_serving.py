@@ -1,18 +1,19 @@
 """End-to-end GNN serving driver (the paper's use case: batched inference).
 
 Simulates a GHOST deployment serving graph-classification requests through
-the bucketed continuous-batching engine (repro.serving.GnnServeEngine):
+the multi-model continuous-batching engine (repro.serving.GnnServeEngine):
 
   (a) offline preprocessing — partition + fetch-order generation (Section
       3.4.1) — runs once per distinct graph via the content-hash cache;
   (b) requests are shape-bucketed and served as vmapped quantized blocked
-      forwards (one bounded jit trace per bucket);
+      forwards (one bounded jit trace per (model, bucket));
   (c) the analytic hardware model accumulates photonic latency/energy per
       request (memoized per structure) into a served-throughput report.
 
-Compare examples/serve_gnn.py (the fp32 engine driver with CLI knobs);
-this script keeps the original quantized-accuracy + hardware-estimate
-story of the ad-hoc loop it replaced.
+This driver registers a single quantized GIN in the catalog and keeps the
+original quantized-accuracy + hardware-estimate story of the ad-hoc loop
+it replaced; see examples/serve_gnn.py for the heterogeneous-catalog /
+scheduler / admission-control demo.
 
 Run:  PYTHONPATH=src python examples/photonic_serving.py [--requests 40]
 """
@@ -43,12 +44,12 @@ def main():
 
     cfg = GhostConfig()
     spec = GnnModelSpec.gin(graphs[0].num_features, 16, 2, mlp_layers=2)
-    engine = GnnServeEngine(model, params, task="graph", cfg=cfg, spec=spec,
-                            slots=args.batch, quantized=True,
-                            dataset_name="Mutag")
+    engine = GnnServeEngine(cfg=cfg, slots=args.batch)
+    engine.register("gin_int8", model, params, task="graph", spec=spec,
+                    quantized=True, dataset_name="Mutag")
 
     queue = graphs[: args.requests]
-    report = engine.run(queue)
+    report = engine.run(queue)   # bare graphs: single-model convenience
     correct = sum(
         int(np.argmax(engine.results[i]) == g.graph_label)
         for i, g in enumerate(queue))

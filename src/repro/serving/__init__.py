@@ -1,5 +1,12 @@
-# Bucketed continuous-batching GNN serving (the paper's deployment story:
-# offline preprocessing feeding the blocked aggregate/combine/update pipe).
+# Multi-model bucketed continuous-batching GNN serving (the paper's
+# deployment story: offline preprocessing feeding the blocked
+# aggregate/combine/update pipe, one engine serving a heterogeneous model
+# catalog through pluggable schedulers and admission control).
+from repro.serving.admission import (
+    ADMISSION_POLICIES,
+    AdmissionController,
+    AdmissionStats,
+)
 from repro.serving.bucketing import (
     Bucket,
     bucket_for,
@@ -14,5 +21,14 @@ from repro.serving.cache import (
     PreprocessCache,
     graph_content_hash,
 )
-from repro.serving.engine import GnnServeEngine, gcn_prepare
+from repro.serving.engine import GnnServeEngine, QueueFullError, gcn_prepare
+from repro.serving.registry import ExecutorPool, ModelEntry, ModelRegistry
 from repro.serving.report import RequestRecord, ServeReport, build_report
+from repro.serving.scheduler import (
+    SCHEDULERS,
+    FifoScheduler,
+    GroupState,
+    OccupancyScheduler,
+    Scheduler,
+    make_scheduler,
+)

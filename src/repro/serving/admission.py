@@ -1,0 +1,72 @@
+"""Admission control: bound the waiting queue so overload degrades cleanly.
+
+An unbounded intake queue turns overload into unbounded memory growth and
+unbounded tail latency.  The controller caps the number of waiting requests
+(``max_waiting``; ``None`` = unbounded, the drain-style default) and decides
+what happens at the cap:
+
+  * ``"reject"``      — the new request is turned away (the caller sees
+                        ``try_submit(...) -> None`` or ``QueueFullError``
+                        from ``submit``); backpressure lands on the newest
+                        traffic.
+  * ``"shed-oldest"`` — the oldest waiting request is dropped to make room;
+                        the new request is admitted.  Sheds load from the
+                        stalest work instead (its rid never produces a
+                        result; the engine lists it in ``shed_rids``).
+
+``AdmissionStats`` (admitted / rejected / shed) is folded into the serve
+report so reject and shed rates are first-class serving metrics.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+ADMISSION_POLICIES = ("reject", "shed-oldest")
+
+
+@dataclasses.dataclass
+class AdmissionStats:
+    admitted: int = 0
+    rejected: int = 0
+    shed: int = 0
+
+    @property
+    def offered(self) -> int:
+        return self.admitted + self.rejected
+
+    @property
+    def reject_rate(self) -> float:
+        return self.rejected / self.offered if self.offered else 0.0
+
+
+class AdmissionController:
+    """Bounded-queue gatekeeper; ``decide`` also maintains the stats."""
+
+    def __init__(self, max_waiting: Optional[int] = None,
+                 policy: str = "reject"):
+        if max_waiting is not None and max_waiting < 1:
+            raise ValueError("max_waiting must be >= 1 (or None = unbounded)")
+        if policy not in ADMISSION_POLICIES:
+            raise ValueError(f"unknown admission policy '{policy}'; "
+                             f"expected one of {ADMISSION_POLICIES}")
+        self.max_waiting = max_waiting
+        self.policy = policy
+        self.stats = AdmissionStats()
+
+    def decide(self, queued: int) -> str:
+        """'admit' | 'reject' | 'shed' for one offered request.
+
+        'shed' means: admit the new request after the caller drops the
+        oldest waiting one (both counters move).
+        """
+        if self.max_waiting is None or queued < self.max_waiting:
+            self.stats.admitted += 1
+            return "admit"
+        if self.policy == "shed-oldest":
+            self.stats.admitted += 1
+            self.stats.shed += 1
+            return "shed"
+        self.stats.rejected += 1
+        return "reject"

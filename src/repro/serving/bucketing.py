@@ -1,9 +1,9 @@
 """Shape bucketing: bound the number of distinct jit traces under load.
 
-Every distinct ``(num_blocks, num_dst_groups, num_src_groups)`` triple is a
-distinct static shape for the blocked forward, and therefore a fresh jit
-trace — unacceptable when serving arbitrary graphs.  We round each dimension
-up to its power-of-two bucket and pad with all-zero tiles:
+Every distinct ``(num_blocks, num_dst_groups, num_src_groups, feat_dim)``
+tuple is a distinct static shape for the blocked forward, and therefore a
+fresh jit trace — unacceptable when serving arbitrary graphs.  We round each
+dimension up to its power-of-two bucket and pad with all-zero tiles:
 
   * padding tiles sit at ``(row, col) = (G_dst_p - 1, G_src_p - 1)``, which
     keeps ``block_row`` non-decreasing (the CSR-sortedness the Pallas kernel
@@ -13,10 +13,20 @@ up to its power-of-two bucket and pad with all-zero tiles:
     mask excludes them), so bucketed outputs match the unpadded forward
     value-for-value on real rows;
   * padded destination/source rows carry zeros (or masked garbage) that
-    callers slice off per request.
+    callers slice off per request;
+  * the feature dimension is rounded up too (``Bucket.f``) and padded with
+    zero *columns*, so a heterogeneous model catalog (different ``f_in``
+    per model) shares one set of host-side batching shapes; executors slice
+    the zero columns back off before the model forward, which keeps the
+    computation bit-identical to the unpadded one.  The rounding trades
+    host-buffer size (worst case ~2x zero columns staged and transferred,
+    immediately sliced off in-trace) for a bounded set of feature widths —
+    the same deal the structural dims make, and what keeps the shape-class
+    count finite if a model ever serves variable-width requests.
 
 With power-of-two rounding the number of traces for graphs up to B blocks
-and G groups is O(log B * log^2 G) per model — in practice a handful.
+and G groups is O(log B * log^2 G) per (model, feature-dim) — in practice a
+handful.
 """
 
 from __future__ import annotations
@@ -37,13 +47,20 @@ def next_pow2(x: int) -> int:
 
 @dataclasses.dataclass(frozen=True)
 class Bucket:
-    """A padded static shape class for the blocked forward."""
+    """A padded static shape class for the blocked forward.
+
+    ``f`` is the padded feature dimension (power-of-two rounded).  The
+    structural fields depend only on the partition; ``f`` depends only on
+    the request's feature width, so a structural bucket can be re-used
+    across feature dims via ``dataclasses.replace(bucket, f=...)``.
+    """
 
     num_blocks: int
     num_dst_groups: int
     num_src_groups: int
     v: int
     n: int
+    f: int = 1
 
     @property
     def padded_dst(self) -> int:
@@ -55,17 +72,18 @@ class Bucket:
 
     def describe(self) -> str:
         return (f"B{self.num_blocks}xD{self.num_dst_groups}"
-                f"xS{self.num_src_groups}(v{self.v},n{self.n})")
+                f"xS{self.num_src_groups}(v{self.v},n{self.n},f{self.f})")
 
 
-def bucket_for(pg: PartitionedGraph) -> Bucket:
-    """The power-of-two bucket a partitioned graph lands in."""
+def bucket_for(pg: PartitionedGraph, feat_dim: int = 1) -> Bucket:
+    """The power-of-two bucket a partitioned graph (+ feature width) lands in."""
     return Bucket(
         num_blocks=next_pow2(pg.blocks.shape[0]),
         num_dst_groups=next_pow2(pg.num_dst_groups),
         num_src_groups=next_pow2(pg.num_src_groups),
         v=pg.v,
         n=pg.n,
+        f=next_pow2(feat_dim),
     )
 
 
@@ -97,12 +115,19 @@ def pad_partition_to_bucket(
 def pad_features_to_bucket(
     pg: PartitionedGraph, bucket: Bucket, feat: np.ndarray
 ) -> np.ndarray:
-    """Pad [Nv, F] features to the bucket's source row count [Gs_p * N, F]."""
+    """Pad [Nv, F] features to the bucket's [Gs_p * N, f] (rows and columns).
+
+    Zero columns are stripped again inside the executor before the model
+    forward, so they never enter the arithmetic — they exist only so
+    heterogeneous feature widths stack into one host-side batch shape.
+    """
     rows = bucket.padded_src
     if feat.shape[0] > rows:
         raise ValueError("feature matrix larger than bucket source rows")
-    out = np.zeros((rows, feat.shape[1]), np.float32)
-    out[: feat.shape[0]] = feat
+    if feat.shape[1] > bucket.f:
+        raise ValueError("feature dim larger than bucket feature dim")
+    out = np.zeros((rows, bucket.f), np.float32)
+    out[: feat.shape[0], : feat.shape[1]] = feat
     return out
 
 

@@ -6,12 +6,15 @@ cost once per distinct graph, not once per request.  The cache key is a
 content hash of everything the partitioner consumes — edge list, node count,
 (V, N) group sizes, and optional per-edge weights — so two requests carrying
 the same structure (regardless of features, which only enter at execute
-time) share one preprocessing artifact.
+time) share one preprocessing artifact.  The key deliberately excludes the
+model: in a multi-model catalog every model using the same prepare
+transform (the ``salt``) shares one partition per structure.
 
 Entries are LRU-evicted.  Each entry also carries a free-form ``extras``
 dict that the engine uses to memoize downstream per-structure artifacts
-(bucket-padded tile arrays, analytic hardware cost), all invariant under the
-same key.
+(the structural shape bucket, bucket-padded tile arrays, and per-model
+analytic hardware cost under ``("hw", model_id)`` keys), all invariant
+under the same key.
 """
 
 from __future__ import annotations

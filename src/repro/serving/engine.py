@@ -1,50 +1,69 @@
-"""Slot-based continuous-batching GNN serving engine.
+"""Multi-model bucketed continuous-batching GNN serving engine.
 
-The GNN-side analogue of ``repro.launch.serve.ServeEngine``: requests join a
-waiting queue; each engine tick gathers up to ``slots`` waiting requests
-that share a shape bucket, stacks their bucketed tile arrays into
-``[R, B, V, N]``, and runs one vmapped blocked forward — via the Pallas
-``block_spmm`` kernel (interpret mode on CPU) or the jnp oracle, selected by
-``backend``.
+One engine instance serves a heterogeneous *catalog* of GNN models
+(GCN/GraphSAGE/GAT/GIN, differing tasks, feature widths, quantization) on
+one substrate — the serving-side analogue of GHOST's versatility claim
+(paper Section 4.1).  The engine is a thin orchestrator over four seams:
 
-Serving costs the ad-hoc loop pays on every request are paid once here:
+  registry + executor pool (serving/registry.py)
+      named ``ModelEntry`` catalog; one jit trace per ``(model_id, bucket)``
+      so the compilation count stays bounded at |models| x |buckets|.
+  scheduler (serving/scheduler.py)
+      requests wait grouped by ``(model_id, bucket)``; a pluggable policy
+      (head-of-line FIFO, or occupancy-aware with an age-based
+      anti-starvation bound) picks the group each tick.
+  admission control (serving/admission.py)
+      optional bound on the waiting queue with reject / shed-oldest
+      overload policies; outcomes surface in the serve report.
+  preprocessing cache (serving/cache.py)
+      partition + fetch order generated once per distinct structure
+      (paper Section 3.4.1) and shared across every model in the catalog
+      that uses the same prepare transform.
 
-  partitioning     -> PreprocessCache, keyed by graph content hash
-  jit tracing      -> one executor per (model, bucket), shapes padded to
-                      power-of-two buckets so the trace count is bounded
-  hardware costing -> analytic GHOST latency/energy memoized per structure
+Each tick gathers up to ``slots`` waiting requests from the chosen group,
+stacks their bucket-padded tile arrays into ``[R, B, V, N]`` (features into
+``[R, rows, bucket.f]``), and runs one vmapped blocked forward — via the
+Pallas ``block_spmm`` kernel (interpret mode on CPU) or the jnp oracle.
 
-Executor numerics: zero padding tiles are exact no-ops (see
-serving/bucketing.py), so per-request outputs match the unbatched
-``model.apply_blocked`` value-for-value at fp32.
+Executor numerics: zero padding tiles, rows, and feature columns are exact
+no-ops (see serving/bucketing.py; executors slice features back to the
+model's true ``f_in`` inside the trace), so per-request outputs match the
+per-model unbatched *jitted* ``model.apply_blocked`` value-for-value at
+fp32, for every model in the catalog.  (Eager, un-jitted execution can
+differ from any jitted run by 1 ULP in GAT's softmax — XLA fuses the
+exp/divide chain differently — so the jitted unbatched forward is the
+reference; batching and bucket padding themselves add no drift.)
+
+Latency accounting uses ``time.perf_counter()`` (monotonic) throughout —
+``time.time()`` can step backwards under clock adjustment and produce
+negative latencies.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from collections import deque
-from typing import Callable, Optional
+from collections import OrderedDict, deque
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.aggregate import (
-    AGGREGATE_BACKENDS,
-    BlockedGraph,
-    aggregate_backend,
-)
 from repro.core.graph import Graph
-from repro.photonic.perf import GhostConfig, GnnModelSpec, OrchFlags, simulate
+from repro.photonic.perf import GhostConfig, OrchFlags, simulate
+from repro.serving.admission import AdmissionController, AdmissionStats
 from repro.serving.bucketing import (
     Bucket,
     bucket_for,
+    next_pow2,
     pad_features_to_bucket,
     pad_partition_to_bucket,
 )
-from repro.serving.cache import PreprocessCache
+from repro.serving.cache import CacheStats, PreprocessCache
+from repro.serving.registry import ExecutorPool, ModelEntry, ModelRegistry
 from repro.serving.report import RequestRecord, ServeReport, build_report
+from repro.serving.scheduler import GroupState, make_scheduler
 
 
 def gcn_prepare(graph: Graph):
@@ -53,9 +72,14 @@ def gcn_prepare(graph: Graph):
     return g, g.gcn_edge_weights()
 
 
+class QueueFullError(RuntimeError):
+    """``submit`` on a full bounded queue under the 'reject' policy."""
+
+
 @dataclasses.dataclass
 class _Pending:
     rid: int
+    model_id: str
     graph: Graph
     bucket: Bucket
     cache_key: str
@@ -63,229 +87,251 @@ class _Pending:
     blocks: np.ndarray      # [Bp, V, N] bucket-padded tiles
     block_row: np.ndarray   # [Bp]
     block_col: np.ndarray   # [Bp]
-    feat: np.ndarray        # [Gs_p * N, F]
-    t_submit: float = 0.0
+    feat: np.ndarray        # [Gs_p * N, bucket.f]
+    t_submit: float         # perf_counter at submission
+    seq: int                # global submission order (FIFO age)
+    submit_tick: int        # engine tick at submission (starvation age)
 
 
 class GnnServeEngine:
-    """Bucketed continuous batching over blocked GNN forwards.
+    """Continuous batching over blocked GNN forwards for a model catalog.
+
+    Construct, ``register`` one model per catalog entry, then ``submit``
+    ``(model_id, graph)`` requests (or call ``run`` on a stream of them).
 
     Args:
-      model: a repro.gnn model (GCN/GraphSAGE/GAT/GIN) — anything exposing
-        ``apply_blocked(params, bg, feat_padded, quantized)`` for the node
-        task; the graph task additionally needs ``node_embed_blocked`` +
-        ``readout`` (GIN-style) so the pooled readout can run per request
-        at its true node count.
-      params: the model's parameter pytree.
-      task: "node" (per-node outputs, sliced to each request's node count)
-        or "graph" (graph-level logits via the split embed/readout path).
-      cfg: GhostConfig — supplies the (V, N) partition group sizes and the
+      cfg: GhostConfig — supplies the (V, N) partition group sizes (shared
+        by the whole catalog, so structures are partitioned once) and the
         analytic hardware model's architecture point.
-      spec: optional GnnModelSpec; when given, each request is also costed
-        on the GHOST analytic model (memoized per graph structure).
+      flags: OrchFlags for the analytic hardware model.
       slots: batch width R; every executor call runs exactly R slots (free
-        slots are zero-filled) so each bucket compiles exactly once.
-      backend: "jnp" oracle or "pallas" kernel for SUM/MEAN aggregation.
-      prepare_fn: optional structure transform run once per distinct graph
-        on cache miss, returning (graph, edge_weights) — e.g. gcn_prepare.
+        slots are zero-filled) so each (model, bucket) compiles exactly once.
+      backend: "jnp" oracle or "pallas" kernel for SUM/MEAN aggregation
+        (MAX and attention always take the jnp path inside the trace).
+      scheduler: "fifo" | "occupancy" | a Scheduler instance.
+      max_waiting: bound on the waiting queue (None = unbounded).
+      admission_policy: "reject" (turn the new request away) or
+        "shed-oldest" (drop the stalest waiting request to make room).
+      cache_capacity: LRU capacity of the preprocessing cache.
     """
 
     def __init__(
         self,
-        model,
-        params,
         *,
-        task: str = "node",
         cfg: GhostConfig = GhostConfig(),
-        spec: Optional[GnnModelSpec] = None,
         flags: OrchFlags = OrchFlags(),
         slots: int = 8,
         backend: str = "jnp",
-        quantized: bool = False,
-        prepare_fn: Optional[Callable] = None,
+        scheduler="fifo",
+        max_waiting: Optional[int] = None,
+        admission_policy: str = "reject",
         cache_capacity: int = 256,
-        dataset_name: str = "served",
     ):
-        if task not in ("node", "graph"):
-            raise ValueError(f"unknown task '{task}'")
-        if task == "graph" and not (hasattr(model, "node_embed_blocked")
-                                    and hasattr(model, "readout")):
-            raise ValueError(
-                "task='graph' needs a model with node_embed_blocked + "
-                "readout (e.g. GIN); node-level models serve task='node'")
-        if backend not in AGGREGATE_BACKENDS:
-            raise ValueError(f"unknown backend '{backend}'; expected one of "
-                             f"{AGGREGATE_BACKENDS}")
-        if slots < 1:
-            raise ValueError("slots must be >= 1")
-        self.model = model
-        self.params = params
-        self.task = task
         self.cfg = cfg.validate()
-        self.spec = spec
         self.flags = flags.validate()
         self.slots = slots
         self.backend = backend
-        self.quantized = quantized
-        self.prepare_fn = prepare_fn
-        self.dataset_name = dataset_name
-
+        self.registry = ModelRegistry()
+        self.pool = ExecutorPool(slots=slots, backend=backend)  # validates
+        self.scheduler = make_scheduler(scheduler)
+        self.admission = AdmissionController(max_waiting, admission_policy)
         self.cache = PreprocessCache(cache_capacity)
         self.results: dict[int, np.ndarray] = {}
         self.records: list[RequestRecord] = []
-        self._waiting: deque[_Pending] = deque()
-        self._executors: dict[Bucket, Callable] = {}
-        self._trace_count = 0
+        self.shed_rids: list[int] = []
+        self._groups: "OrderedDict[tuple, deque[_Pending]]" = OrderedDict()
         self._next_rid = 0
-        self._salt = (prepare_fn.__qualname__ if prepare_fn is not None
-                      else "")
+        self._seq = 0
+        self._tick = 0
+        self._max_dropped_wait_ticks = 0
+
+    # ------------------------------------------------------------------
+    # Catalog.
+    # ------------------------------------------------------------------
+
+    def register(self, model_id: str, model, params, **kwargs) -> ModelEntry:
+        """Add one model to the catalog (see ModelRegistry.register)."""
+        return self.registry.register(model_id, model, params, **kwargs)
 
     # ------------------------------------------------------------------
     # Request intake.
     # ------------------------------------------------------------------
 
-    def submit(self, graph: Graph) -> int:
-        """Preprocess (cached) and enqueue one request; returns its rid."""
-        t0 = time.time()
-        entry, hit = self.cache.get_or_partition(
-            graph, self.cfg.v, self.cfg.n,
-            transform=self.prepare_fn, salt=self._salt)
-        pg = entry.pg
-        if "bucket" not in entry.extras:
-            bucket = bucket_for(pg)
-            entry.extras["bucket"] = bucket
-            entry.extras["padded"] = pad_partition_to_bucket(pg, bucket)
-        bucket = entry.extras["bucket"]
-        blocks, row, col = entry.extras["padded"]
+    @property
+    def num_waiting(self) -> int:
+        return sum(len(dq) for dq in self._groups.values())
+
+    def try_submit(self, model_id: str, graph: Graph) -> Optional[int]:
+        """Preprocess (cached) and enqueue one request.
+
+        Returns the rid, or None when admission control rejected it.
+        """
+        entry_m = self.registry[model_id]
+        f = graph.node_feat.shape[1]
+        if f != entry_m.f_in:
+            raise ValueError(
+                f"model '{model_id}' expects {entry_m.f_in} features, "
+                f"request carries {f}")
+        verdict = self.admission.decide(self.num_waiting)
+        if verdict == "reject":
+            return None
+        t0 = time.perf_counter()
+        try:
+            centry, hit = self.cache.get_or_partition(
+                graph, self.cfg.v, self.cfg.n,
+                transform=entry_m.prepare_fn, salt=entry_m.salt)
+            pg = centry.pg
+            shape = centry.extras.get("shape")
+            if shape is None:
+                # Structural artifacts are feature-width-independent: cache
+                # the f=1 bucket + padded tile arrays once per structure and
+                # derive the request's full bucket from its feature width.
+                shape = centry.extras["shape"] = bucket_for(pg)
+                centry.extras["padded"] = pad_partition_to_bucket(pg, shape)
+            bucket = dataclasses.replace(shape, f=next_pow2(f))
+            blocks, row, col = centry.extras["padded"]
+            feat = pad_features_to_bucket(pg, bucket, graph.node_feat)
+        except Exception:
+            # Preprocessing failed: this admission never happened.  Roll the
+            # stats back; crucially, no waiting victim has been shed yet.
+            self.admission.stats.admitted -= 1
+            if verdict == "shed":
+                self.admission.stats.shed -= 1
+            raise
+        if verdict == "shed":
+            # Shed only now, once the replacement request is viable.
+            self._shed_oldest()
         rid = self._next_rid
         self._next_rid += 1
-        self._waiting.append(_Pending(
+        pending = _Pending(
             rid=rid,
+            model_id=model_id,
             graph=graph,
             bucket=bucket,
-            cache_key=entry.key,
+            cache_key=centry.key,
             cache_hit=hit,
             blocks=blocks,
             block_row=row,
             block_col=col,
-            feat=pad_features_to_bucket(pg, bucket, graph.node_feat),
+            feat=feat,
             t_submit=t0,
-        ))
+            seq=self._seq,
+            submit_tick=self._tick,
+        )
+        self._seq += 1
+        self._groups.setdefault((model_id, bucket), deque()).append(pending)
         return rid
 
-    # ------------------------------------------------------------------
-    # Executors: one jit trace per (model, bucket).
-    # ------------------------------------------------------------------
+    def submit(self, model_id: str, graph: Graph) -> int:
+        """Like try_submit, but raises QueueFullError on rejection."""
+        rid = self.try_submit(model_id, graph)
+        if rid is None:
+            raise QueueFullError(
+                f"waiting queue full ({self.admission.max_waiting}) and "
+                f"admission policy is '{self.admission.policy}'")
+        return rid
 
-    def _make_executor(self, bucket: Bucket) -> Callable:
-        model, task, backend = self.model, self.task, self.backend
-        quantized = self.quantized
-        # The executor's static node count: padded rows past this are pure
-        # padding on both the source and destination sides; per-request
-        # validity is handled by host-side slicing.  The graph task runs the
-        # blocked *embedding* batch-wide and leaves the sum-pool readout to
-        # the per-request path (the fp32 pooled sum depends on row count, so
-        # pooling at the bucket shape would break bit-exactness).
-        num_nodes = min(bucket.padded_dst, bucket.padded_src)
-
-        def fwd(params, blocks, row, col, feat):
-            self._trace_count += 1  # runs at trace time only
-            bg = BlockedGraph(
-                blocks=blocks, block_row=row, block_col=col,
-                num_dst_groups=bucket.num_dst_groups,
-                num_src_groups=bucket.num_src_groups,
-                v=bucket.v, n=bucket.n, num_nodes=num_nodes,
-            )
-            with aggregate_backend(backend):
-                if task == "graph":
-                    return model.node_embed_blocked(params, bg, feat,
-                                                    quantized)
-                return model.apply_blocked(params, bg, feat, quantized)
-
-        batched = jax.vmap(fwd, in_axes=(None, 0, 0, 0, 0))
-        return jax.jit(batched)
+    def _shed_oldest(self) -> None:
+        key, dq = min(self._groups.items(), key=lambda kv: kv[1][0].seq)
+        victim = dq.popleft()
+        if not dq:
+            del self._groups[key]
+        self.shed_rids.append(victim.rid)
+        # The victim's wait counts toward the starvation gauge: a policy
+        # that quietly dropped its stalest work must not look starvation-free.
+        self._max_dropped_wait_ticks = max(
+            self._max_dropped_wait_ticks, self._tick - victim.submit_tick)
 
     # ------------------------------------------------------------------
     # Engine ticks.
     # ------------------------------------------------------------------
 
     def step(self) -> int:
-        """Serve one batch: the head-of-line bucket, up to ``slots`` deep.
+        """Serve one batch from the scheduler-chosen (model, bucket) group.
 
         Returns the number of requests served (0 when the queue is empty).
         """
-        if not self._waiting:
+        if not self._groups:
             return 0
-        bucket = self._waiting[0].bucket
-        batch: list[_Pending] = []
-        keep: deque[_Pending] = deque()
-        while self._waiting:
-            p = self._waiting.popleft()
-            if p.bucket == bucket and len(batch) < self.slots:
-                batch.append(p)
-            else:
-                keep.append(p)
-        self._waiting = keep
+        now = time.perf_counter()
+        states = [
+            GroupState(key=key, size=len(dq), head_seq=dq[0].seq,
+                       head_wait_ticks=self._tick - dq[0].submit_tick,
+                       head_age_s=now - dq[0].t_submit)
+            for key, dq in self._groups.items()
+        ]
+        key = self.scheduler.select(states, self.slots)
+        dq = self._groups.get(key)
+        if dq is None:
+            raise RuntimeError(f"scheduler chose unknown group {key!r}")
+        batch = [dq.popleft() for _ in range(min(self.slots, len(dq)))]
+        if not dq:
+            del self._groups[key]
+        serve_tick = self._tick
+        self._tick += 1
 
+        model_id, bucket = key
+        entry = self.registry[model_id]
         r = self.slots
         bp, v, n = bucket.num_blocks, bucket.v, bucket.n
-        f = batch[0].feat.shape[1]
         blocks = np.zeros((r, bp, v, n), np.float32)
         rows = np.zeros((r, bp), np.int32)
         cols = np.zeros((r, bp), np.int32)
-        feats = np.zeros((r, bucket.padded_src, f), np.float32)
+        feats = np.zeros((r, bucket.padded_src, bucket.f), np.float32)
         for i, p in enumerate(batch):
             blocks[i], rows[i], cols[i] = p.blocks, p.block_row, p.block_col
             feats[i] = p.feat
 
-        exe = self._executors.get(bucket)
-        if exe is None:
-            exe = self._executors[bucket] = self._make_executor(bucket)
-        out = exe(self.params, jnp.asarray(blocks), jnp.asarray(rows),
+        exe = self.pool.executor(entry, bucket)
+        out = exe(entry.params, jnp.asarray(blocks), jnp.asarray(rows),
                   jnp.asarray(cols), jnp.asarray(feats))
         out = np.asarray(jax.block_until_ready(out))
-        t_done = time.time()
+        t_done = time.perf_counter()
 
         for i, p in enumerate(batch):
             valid = out[i][: p.graph.num_nodes]
-            if self.task == "node":
+            if entry.task == "node":
                 self.results[p.rid] = valid
             else:
                 self.results[p.rid] = np.asarray(
-                    self.model.readout(self.params, jnp.asarray(valid)))
-            hw_lat, hw_e = self._hardware_cost(p)
+                    entry.model.readout(entry.params, jnp.asarray(valid)))
+            hw_lat, hw_e = self._hardware_cost(entry, p)
             self.records.append(RequestRecord(
                 rid=p.rid,
+                model_id=model_id,
                 num_nodes=p.graph.num_nodes,
                 num_edges=p.graph.num_edges,
                 bucket=bucket.describe(),
                 cache_hit=p.cache_hit,
                 latency_s=t_done - p.t_submit,
                 batch_size=len(batch),
+                wait_ticks=serve_tick - p.submit_tick,
                 hw_latency_s=hw_lat,
                 hw_energy_j=hw_e,
             ))
         return len(batch)
 
-    def _hardware_cost(self, p: _Pending) -> tuple[float, float]:
-        if self.spec is None:
+    def _hardware_cost(self, entry: ModelEntry,
+                       p: _Pending) -> tuple[float, float]:
+        if entry.spec is None:
             return 0.0, 0.0
-        entry = self.cache._entries.get(p.cache_key)
-        if entry is not None and "hw" in entry.extras:
-            return entry.extras["hw"]
-        if entry is not None:
-            graph = entry.extras.get("graph", p.graph)
-        elif self.prepare_fn is not None:
+        centry = self.cache._entries.get(p.cache_key)
+        hw_key = ("hw", entry.model_id)  # per-model: specs differ per entry
+        if centry is not None and hw_key in centry.extras:
+            return centry.extras[hw_key]
+        if centry is not None:
+            graph = centry.extras.get("graph", p.graph)
+        elif entry.prepare_fn is not None:
             # Entry evicted between submit and serve: re-derive the executed
             # structure so the hardware numbers don't depend on cache state.
-            graph, _ = self.prepare_fn(p.graph)
+            graph, _ = entry.prepare_fn(p.graph)
         else:
             graph = p.graph
-        rep = simulate(self.spec, graph, self.cfg, self.flags,
-                       self.dataset_name)
+        rep = simulate(entry.spec, graph, self.cfg, self.flags,
+                       entry.dataset_name)
         cost = (rep.latency, rep.energy)
-        if entry is not None:
-            entry.extras["hw"] = cost
+        if centry is not None:
+            centry.extras[hw_key] = cost
         return cost
 
     def drain(self) -> int:
@@ -297,14 +343,60 @@ class GnnServeEngine:
                 return total
             total += served
 
-    def run(self, graphs) -> ServeReport:
-        """Submit every graph, drain, and build the throughput report."""
-        t0 = time.time()
-        for g in graphs:
-            self.submit(g)
+    def run(self, requests) -> ServeReport:
+        """Submit a stream, drain, and build the throughput report.
+
+        ``requests`` yields ``(model_id, graph)`` pairs; bare graphs are
+        accepted when exactly one model is registered.  With a bounded
+        queue the engine interleaves serving with intake instead of
+        rejecting (closed-loop semantics; use try_submit for open-loop).
+        """
+        t0 = time.perf_counter()
+        max_waiting = self.admission.max_waiting
+        for item in requests:
+            if isinstance(item, Graph):
+                model_id, graph = self.registry.sole_id, item
+            else:
+                model_id, graph = item
+            # Drain ahead of the bound so closed-loop intake is never
+            # rejected (and the reject/shed stats stay pure open-loop
+            # signals).
+            while max_waiting is not None and self.num_waiting >= max_waiting:
+                self.step()
+            self.submit(model_id, graph)
         self.drain()
-        return self.report(time.time() - t0)
+        return self.report(time.perf_counter() - t0)
+
+    def take_result(self, rid: int) -> np.ndarray:
+        """Pop and return one result (KeyError if absent or already taken).
+
+        Long-running servers should reclaim results as they are consumed:
+        ``results`` and ``records`` otherwise grow with total traffic, and
+        the admission bound only caps the *waiting* queue, not delivered
+        output retention.
+        """
+        return self.results.pop(rid)
 
     def report(self, wall_s: float) -> ServeReport:
+        # The starvation gauge must see requests still waiting (or already
+        # shed), not just the served ones — a policy that never serves a
+        # cold group would otherwise report a low max wait.
+        waiting_wait = max(
+            (self._tick - dq[0].submit_tick for dq in self._groups.values()),
+            default=0)
         return build_report(self.records, wall_s, self.cache.stats,
-                            self._trace_count, self.backend)
+                            self.pool.trace_count, self.backend,
+                            scheduler=self.scheduler.name,
+                            admission_stats=self.admission.stats,
+                            queue_max_wait_ticks=max(
+                                waiting_wait, self._max_dropped_wait_ticks))
+
+    def reset_metrics(self) -> None:
+        """Zero serving metrics while keeping compiled executors and cache
+        entries — so benchmarks can warm up and then measure steady state."""
+        self.results.clear()
+        self.records.clear()
+        self.shed_rids.clear()
+        self._max_dropped_wait_ticks = 0
+        self.cache.stats = CacheStats()
+        self.admission.stats = AdmissionStats()

@@ -1,0 +1,187 @@
+"""Model registry + executor pool: the multi-model seam of the engine.
+
+GHOST's pitch (paper Section 4.1) is one substrate serving GCN / GraphSAGE /
+GAT / GIN alike; the serving-side analogue is one engine serving a
+heterogeneous *catalog*.  Two pieces:
+
+  * ``ModelRegistry`` — named catalog entries (``ModelEntry``): the model
+    object and params plus everything per-model the engine used to take as
+    constructor state (task, analytic spec, quantization, prepare
+    transform, dataset label, feature width).  Registration fail-fast
+    validates the task/model contract.
+  * ``ExecutorPool`` — compiled vmapped blocked forwards keyed by
+    ``(model_id, Bucket)``.  Each executor is one jit trace; the pool is
+    the engine's whole compilation state, so the trace count is bounded by
+    |models| x |buckets observed|.
+
+Executors accept feature batches at the *bucket's* padded feature width and
+slice back to the model's true ``f_in`` inside the trace — the zero padding
+columns never enter the arithmetic, so per-request outputs stay bit-exact
+vs the unbatched ``apply_blocked`` while models with different feature
+widths share the host-side batching machinery.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Callable, Iterator, Optional
+
+import jax
+
+from repro.core.aggregate import (
+    AGGREGATE_BACKENDS,
+    BlockedGraph,
+    aggregate_backend,
+)
+from repro.serving.bucketing import Bucket
+
+
+@dataclasses.dataclass
+class ModelEntry:
+    """One catalog entry: a model plus its per-model serving config."""
+
+    model_id: str
+    model: object
+    params: object
+    task: str                      # "node" | "graph"
+    f_in: int                      # true (unpadded) input feature width
+    spec: Optional[object] = None  # GnnModelSpec for analytic hw costing
+    quantized: bool = False
+    prepare_fn: Optional[Callable] = None
+    dataset_name: str = "served"
+
+    @property
+    def salt(self) -> str:
+        """Cache-key salt: identifies the prepare transform, not the model,
+        so models sharing a transform share preprocessing artifacts."""
+        return self.prepare_fn.__qualname__ if self.prepare_fn else ""
+
+
+class ModelRegistry:
+    """Named, validated catalog of servable models."""
+
+    def __init__(self):
+        self._entries: "OrderedDict[str, ModelEntry]" = OrderedDict()
+
+    def register(
+        self,
+        model_id: str,
+        model,
+        params,
+        *,
+        task: str = "node",
+        spec=None,
+        quantized: bool = False,
+        prepare_fn: Optional[Callable] = None,
+        dataset_name: str = "served",
+        f_in: Optional[int] = None,
+    ) -> ModelEntry:
+        if model_id in self._entries:
+            raise ValueError(f"model_id '{model_id}' already registered")
+        if task not in ("node", "graph"):
+            raise ValueError(f"unknown task '{task}'")
+        if task == "graph" and not (hasattr(model, "node_embed_blocked")
+                                    and hasattr(model, "readout")):
+            raise ValueError(
+                "task='graph' needs a model with node_embed_blocked + "
+                "readout (e.g. GIN); node-level models serve task='node'")
+        if not hasattr(model, "apply_blocked"):
+            raise ValueError("model must expose apply_blocked(...)")
+        if f_in is None:
+            f_in = getattr(model, "f_in", None)
+        if f_in is None or f_in < 1:
+            raise ValueError("pass f_in= (model has no f_in attribute)")
+        entry = ModelEntry(
+            model_id=model_id, model=model, params=params, task=task,
+            f_in=int(f_in), spec=spec, quantized=quantized,
+            prepare_fn=prepare_fn, dataset_name=dataset_name)
+        self._entries[model_id] = entry
+        return entry
+
+    def __getitem__(self, model_id: str) -> ModelEntry:
+        entry = self._entries.get(model_id)
+        if entry is None:
+            raise KeyError(f"unknown model_id '{model_id}'; registered: "
+                           f"{list(self._entries)}")
+        return entry
+
+    def __contains__(self, model_id: str) -> bool:
+        return model_id in self._entries
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __iter__(self) -> Iterator[ModelEntry]:
+        return iter(self._entries.values())
+
+    def ids(self) -> list[str]:
+        return list(self._entries)
+
+    @property
+    def sole_id(self) -> str:
+        """The single registered model id (bare-graph request convenience)."""
+        if len(self._entries) != 1:
+            raise ValueError(
+                "bare-graph requests need exactly one registered model; "
+                f"registry holds {list(self._entries)}")
+        return next(iter(self._entries))
+
+
+class ExecutorPool:
+    """Compiled vmapped blocked forwards, one per (model_id, bucket)."""
+
+    def __init__(self, slots: int, backend: str):
+        if slots < 1:
+            raise ValueError("slots must be >= 1")
+        if backend not in AGGREGATE_BACKENDS:
+            raise ValueError(f"unknown backend '{backend}'; expected one of "
+                             f"{AGGREGATE_BACKENDS}")
+        self.slots = slots
+        self.backend = backend
+        self._executors: dict[tuple[str, Bucket], Callable] = {}
+        self._trace_count = 0
+
+    @property
+    def trace_count(self) -> int:
+        return self._trace_count
+
+    def __len__(self) -> int:
+        return len(self._executors)
+
+    def executor(self, entry: ModelEntry, bucket: Bucket) -> Callable:
+        key = (entry.model_id, bucket)
+        exe = self._executors.get(key)
+        if exe is None:
+            exe = self._executors[key] = self._build(entry, bucket)
+        return exe
+
+    def _build(self, entry: ModelEntry, bucket: Bucket) -> Callable:
+        model, task = entry.model, entry.task
+        quantized, f_in = entry.quantized, entry.f_in
+        backend = self.backend
+        # The executor's static node count: padded rows past this are pure
+        # padding on both the source and destination sides; per-request
+        # validity is handled by host-side slicing.  The graph task runs the
+        # blocked *embedding* batch-wide and leaves the sum-pool readout to
+        # the per-request path (the fp32 pooled sum depends on row count, so
+        # pooling at the bucket shape would break bit-exactness).
+        num_nodes = min(bucket.padded_dst, bucket.padded_src)
+
+        def fwd(params, blocks, row, col, feat):
+            self._trace_count += 1  # runs at trace time only
+            feat = feat[:, :f_in]   # strip feature-dim bucket padding
+            bg = BlockedGraph(
+                blocks=blocks, block_row=row, block_col=col,
+                num_dst_groups=bucket.num_dst_groups,
+                num_src_groups=bucket.num_src_groups,
+                v=bucket.v, n=bucket.n, num_nodes=num_nodes,
+            )
+            with aggregate_backend(backend):
+                if task == "graph":
+                    return model.node_embed_blocked(params, bg, feat,
+                                                    quantized)
+                return model.apply_blocked(params, bg, feat, quantized)
+
+        batched = jax.vmap(fwd, in_axes=(None, 0, 0, 0, 0))
+        return jax.jit(batched)

@@ -3,10 +3,15 @@
 The engine records one ``RequestRecord`` per served request; ``ServeReport``
 folds them into the numbers a deployment dashboard (or the serving
 benchmark's JSON) wants: functional req/s on this host, latency percentiles,
-preprocessing-cache effectiveness, how many jit traces the bucketing policy
-actually paid, and the accumulated GHOST latency/energy from the analytic
-model (photonic/perf.py) — i.e. what the same request stream would cost on
-the accelerator.
+per-model served counts, queue-wait / anti-starvation behavior (max wait in
+engine ticks), admission-control outcomes (admitted / rejected / shed),
+preprocessing-cache effectiveness, how many jit traces the (model, bucket)
+executor pool actually paid, and the accumulated GHOST latency/energy from
+the analytic model (photonic/perf.py) — i.e. what the same request stream
+would cost on the accelerator.
+
+Durations are measured with ``time.perf_counter()`` (monotonic): wall-clock
+time is not, and latency stats must never go negative under a clock step.
 """
 
 from __future__ import annotations
@@ -21,12 +26,14 @@ import numpy as np
 @dataclasses.dataclass
 class RequestRecord:
     rid: int
+    model_id: str
     num_nodes: int
     num_edges: int
     bucket: str
     cache_hit: bool
-    latency_s: float           # wall time: submit -> result materialized
+    latency_s: float           # monotonic time: submit -> result materialized
     batch_size: int            # real requests in the batch that served it
+    wait_ticks: int = 0        # engine ticks spent waiting in the queue
     hw_latency_s: float = 0.0  # analytic GHOST inference latency
     hw_energy_j: float = 0.0
 
@@ -48,7 +55,15 @@ class ServeReport:
     cache_hit_rate: float
     traces_compiled: int
     buckets: dict            # bucket description -> requests served in it
+    per_model: dict          # model_id -> requests served for it
     backend: str
+    scheduler: str
+    max_wait_ticks: int      # worst queue wait observed — served, still
+                             # waiting, or shed (starvation gauge)
+    admitted: int
+    rejected: int
+    shed: int
+    reject_rate: float
     hw_latency_s: float
     hw_energy_j: float
     hw_req_per_s: float
@@ -60,10 +75,15 @@ class ServeReport:
     def pretty(self) -> str:
         return (
             f"served {self.requests} requests in {self.wall_s:.2f}s "
-            f"({self.req_per_s:.1f} req/s functional, backend={self.backend})\n"
+            f"({self.req_per_s:.1f} req/s functional, backend={self.backend}, "
+            f"scheduler={self.scheduler})\n"
             f"  latency p50={self.p50_latency_ms:.1f}ms "
             f"p99={self.p99_latency_ms:.1f}ms, "
-            f"mean batch {self.mean_batch_size:.1f}\n"
+            f"mean batch {self.mean_batch_size:.1f}, "
+            f"max queue wait {self.max_wait_ticks} ticks\n"
+            f"  admission: {self.admitted} admitted / {self.rejected} rejected"
+            f" / {self.shed} shed (reject rate {self.reject_rate:.2f})\n"
+            f"  per model: {self.per_model}\n"
             f"  preprocess cache: {self.cache_hits} hits / "
             f"{self.cache_misses} misses (hit rate {self.cache_hit_rate:.2f})\n"
             f"  jit traces compiled: {self.traces_compiled} "
@@ -80,11 +100,16 @@ def build_report(
     cache_stats,
     traces_compiled: int,
     backend: str,
+    scheduler: str = "fifo",
+    admission_stats=None,
+    queue_max_wait_ticks: int = 0,
 ) -> ServeReport:
     lats = [r.latency_s for r in records]
     buckets: dict[str, int] = {}
+    per_model: dict[str, int] = {}
     for r in records:
         buckets[r.bucket] = buckets.get(r.bucket, 0) + 1
+        per_model[r.model_id] = per_model.get(r.model_id, 0) + 1
     hw_lat = sum(r.hw_latency_s for r in records)
     hw_e = sum(r.hw_energy_j for r in records)
     return ServeReport(
@@ -100,7 +125,16 @@ def build_report(
         cache_hit_rate=cache_stats.hit_rate,
         traces_compiled=traces_compiled,
         buckets=buckets,
+        per_model=per_model,
         backend=backend,
+        scheduler=scheduler,
+        max_wait_ticks=max(
+            max((r.wait_ticks for r in records), default=0),
+            queue_max_wait_ticks),
+        admitted=admission_stats.admitted if admission_stats else len(records),
+        rejected=admission_stats.rejected if admission_stats else 0,
+        shed=admission_stats.shed if admission_stats else 0,
+        reject_rate=admission_stats.reject_rate if admission_stats else 0.0,
         hw_latency_s=hw_lat,
         hw_energy_j=hw_e,
         hw_req_per_s=len(records) / hw_lat if hw_lat > 0 else 0.0,

@@ -4,8 +4,13 @@ The load-bearing claims:
   * per-request engine outputs == the unbatched blocked forward, exactly
     (fp32 value-for-value), on both aggregation backends;
   * the preprocessing cache actually deduplicates partitioning work;
-  * shape bucketing bounds the jit trace count;
-  * bucket padding (zero tiles, padded groups) is numerically inert.
+  * shape bucketing (including the feature dim) bounds the jit trace count;
+  * bucket padding (zero tiles, padded groups, zero feature columns) is
+    numerically inert;
+  * hardware accounting survives cache eviction between submit and serve.
+
+Multi-model catalogs, schedulers, and admission control are covered in
+tests/test_serving_multimodel.py.
 """
 
 import jax
@@ -50,6 +55,15 @@ def make_graph(seed, nv=None, ne=None, f=7, labeled=False):
     return g
 
 
+def single_model_engine(model, params, **kw):
+    """One-model engine: the common fixture shape in this file."""
+    reg = {k: kw.pop(k) for k in ("task", "spec", "prepare_fn", "quantized")
+           if k in kw}
+    eng = GnnServeEngine(**kw)
+    eng.register("m", model, params, **reg)
+    return eng
+
+
 # ---------------------------------------------------------------------------
 # Bucketing primitives.
 # ---------------------------------------------------------------------------
@@ -65,13 +79,15 @@ def test_bucket_padding_is_numerically_inert(reduce):
     """Aggregation over bucket-padded tiles == unpadded, on real rows."""
     g = make_graph(3, nv=45, ne=160)
     pg = partition_graph(g, v=8, n=8)
-    bucket = bucket_for(pg)
+    bucket = bucket_for(pg, g.node_feat.shape[1])
+    assert bucket.f == 8  # 7 features round up to the pow2 bucket
     blocks, row, col = pad_partition_to_bucket(pg, bucket)
     assert blocks.shape[0] == bucket.num_blocks
     assert (np.diff(row) >= 0).all()  # CSR sortedness preserved
 
     featp = jnp.asarray(pg.pad_features(g.node_feat))
     featb = jnp.asarray(pad_features_to_bucket(pg, bucket, g.node_feat))
+    assert featb.shape == (bucket.padded_src, bucket.f)
     ref = aggregate_blocked(to_blocked(pg), featp, reduce)
     bg = BlockedGraph(
         blocks=jnp.asarray(blocks), block_row=jnp.asarray(row),
@@ -80,8 +96,24 @@ def test_bucket_padding_is_numerically_inert(reduce):
         num_src_groups=bucket.num_src_groups,
         v=pg.v, n=pg.n, num_nodes=g.num_nodes)
     got = aggregate_blocked(bg, featb, reduce)
-    np.testing.assert_array_equal(np.asarray(got)[: g.num_nodes],
-                                  np.asarray(ref)[: g.num_nodes])
+    # Aggregation is columnwise: the zero padding columns stay zero and the
+    # real columns match the unpadded forward exactly.
+    np.testing.assert_array_equal(
+        np.asarray(got)[: g.num_nodes, : g.node_feat.shape[1]],
+        np.asarray(ref)[: g.num_nodes])
+    np.testing.assert_array_equal(
+        np.asarray(got)[: g.num_nodes, g.node_feat.shape[1]:], 0.0)
+
+
+def test_feature_dim_bucketing_shares_host_shapes():
+    """Different feature widths below one pow2 land in one bucket shape."""
+    g6 = make_graph(4, nv=30, ne=80, f=6)
+    g7 = make_graph(4, nv=30, ne=80, f=7)
+    pg = partition_graph(g6, v=8, n=8)
+    b6, b7 = bucket_for(pg, 6), bucket_for(pg, 7)
+    assert b6 == b7 and b6.f == 8
+    assert pad_features_to_bucket(pg, b6, g6.node_feat).shape == \
+        pad_features_to_bucket(pg, b7, g7.node_feat).shape
 
 
 # ---------------------------------------------------------------------------
@@ -142,9 +174,9 @@ def test_engine_matches_unbatched_blocked_forward_exactly(backend):
     model = build_model("gcn", 7, 3, hidden=8)
     params = model.init(jax.random.PRNGKey(0))
     cfg = GhostConfig(v=8, n=8)
-    eng = GnnServeEngine(model, params, task="node", cfg=cfg, slots=4,
-                         backend=backend, prepare_fn=gcn_prepare,
-                         spec=GnnModelSpec.gcn(7, 8, 3))
+    eng = single_model_engine(model, params, task="node", cfg=cfg, slots=4,
+                              backend=backend, prepare_fn=gcn_prepare,
+                              spec=GnnModelSpec.gcn(7, 8, 3))
     rep = eng.run(graphs)
 
     assert rep.requests == len(graphs)
@@ -166,8 +198,8 @@ def test_engine_graph_task_gin_exact(backend):
     model = build_model("gin", 6, 2, hidden=8, mlp_layers=2)
     params = model.init(jax.random.PRNGKey(1))
     cfg = GhostConfig(v=5, n=7)  # v != n exercises asymmetric padding
-    eng = GnnServeEngine(model, params, task="graph", cfg=cfg, slots=3,
-                         backend=backend)
+    eng = single_model_engine(model, params, task="graph", cfg=cfg, slots=3,
+                              backend=backend)
     eng.run(graphs)
     for i, g in enumerate(graphs):
         pg = partition_graph(g, v=5, n=7)
@@ -185,8 +217,8 @@ def test_engine_trace_count_is_bounded_by_buckets():
               for _ in range(20)]
     model = build_model("gcn", 7, 3, hidden=8)
     params = model.init(jax.random.PRNGKey(0))
-    eng = GnnServeEngine(model, params, task="node",
-                         cfg=GhostConfig(v=8, n=8), slots=4)
+    eng = single_model_engine(model, params, task="node",
+                              cfg=GhostConfig(v=8, n=8), slots=4)
     rep = eng.run(graphs)
     assert rep.traces_compiled == len(rep.buckets)
     assert rep.traces_compiled < len(graphs)
@@ -199,8 +231,8 @@ def test_engine_batches_share_buckets():
     graphs = [g] * 6
     model = build_model("sage", 7, 2, hidden=4)
     params = model.init(jax.random.PRNGKey(2))
-    eng = GnnServeEngine(model, params, task="node",
-                         cfg=GhostConfig(v=8, n=8), slots=4)
+    eng = single_model_engine(model, params, task="node",
+                              cfg=GhostConfig(v=8, n=8), slots=4)
     rep = eng.run(graphs)
     assert rep.traces_compiled == 1
     assert rep.mean_batch_size > 1
@@ -213,8 +245,9 @@ def test_engine_zero_edge_graph():
               .standard_normal((9, 6)).astype(np.float32)).validate()
     model = build_model("gin", 6, 2, hidden=4, mlp_layers=2)
     params = model.init(jax.random.PRNGKey(3))
-    eng = GnnServeEngine(model, params, task="graph",
-                         cfg=GhostConfig(v=4, n=4), slots=2, backend="pallas")
+    eng = single_model_engine(model, params, task="graph",
+                              cfg=GhostConfig(v=4, n=4), slots=2,
+                              backend="pallas")
     eng.run([g])
     pg = partition_graph(g, v=4, n=4)
     featp = jnp.asarray(pg.pad_features(g.node_feat))
@@ -229,30 +262,51 @@ def test_engine_report_json_roundtrips():
     g = make_graph(5, nv=16, ne=30)
     model = build_model("gcn", 7, 2, hidden=4)
     params = model.init(jax.random.PRNGKey(0))
-    eng = GnnServeEngine(model, params, task="node",
-                         cfg=GhostConfig(v=8, n=8), slots=2,
-                         spec=GnnModelSpec.gcn(7, 4, 2))
+    eng = single_model_engine(model, params, task="node",
+                              cfg=GhostConfig(v=8, n=8), slots=2,
+                              spec=GnnModelSpec.gcn(7, 4, 2))
     rep = eng.run([g, g, g])
     doc = json.loads(rep.to_json())
     for key in ("requests", "req_per_s", "p50_latency_ms", "p99_latency_ms",
-                "cache_hit_rate", "traces_compiled", "hw_latency_s"):
+                "cache_hit_rate", "traces_compiled", "hw_latency_s",
+                "scheduler", "per_model", "admitted", "rejected", "shed",
+                "max_wait_ticks"):
         assert key in doc
     assert doc["requests"] == 3
     assert doc["cache_hit_rate"] == pytest.approx(2 / 3)
+    assert doc["scheduler"] == "fifo"
+    assert doc["per_model"] == {"m": 3}
+    assert doc["admitted"] == 3 and doc["rejected"] == 0
+    # perf_counter latency accounting: never negative.
+    assert all(r.latency_s >= 0 for r in eng.records)
 
 
 def test_engine_rejects_bad_config():
     model = build_model("gcn", 7, 2, hidden=4)
     params = model.init(jax.random.PRNGKey(0))
+    eng = GnnServeEngine()
     with pytest.raises(ValueError):
-        GnnServeEngine(model, params, task="edge")
+        eng.register("m", model, params, task="edge")
     with pytest.raises(ValueError):
-        GnnServeEngine(model, params, slots=0)
+        GnnServeEngine(slots=0)
     # Fail fast at construction, before any requests are queued:
     with pytest.raises(ValueError):
-        GnnServeEngine(model, params, backend="nope")
+        GnnServeEngine(backend="nope")
     with pytest.raises(ValueError):
-        GnnServeEngine(model, params, task="graph")  # GCN has no readout
+        GnnServeEngine(scheduler="nope")
+    with pytest.raises(ValueError):
+        GnnServeEngine(max_waiting=0)
+    with pytest.raises(ValueError):
+        GnnServeEngine(admission_policy="nope")
+    with pytest.raises(ValueError):
+        eng.register("m", model, params, task="graph")  # GCN has no readout
+    eng.register("m", model, params)
+    with pytest.raises(ValueError):
+        eng.register("m", model, params)  # duplicate id
+    with pytest.raises(KeyError):
+        eng.submit("ghost", make_graph(0))
+    with pytest.raises(ValueError):
+        eng.submit("m", make_graph(0, f=9))  # feature-width mismatch
 
 
 def test_engine_hw_cost_stable_under_eviction():
@@ -263,13 +317,14 @@ def test_engine_hw_cost_stable_under_eviction():
     params = model.init(jax.random.PRNGKey(0))
 
     def run_with(capacity):
-        eng = GnnServeEngine(model, params, task="node",
-                             cfg=GhostConfig(v=8, n=8), slots=2,
-                             prepare_fn=gcn_prepare, cache_capacity=capacity,
-                             spec=GnnModelSpec.gcn(7, 4, 2))
+        eng = single_model_engine(model, params, task="node",
+                                  cfg=GhostConfig(v=8, n=8), slots=2,
+                                  prepare_fn=gcn_prepare,
+                                  cache_capacity=capacity,
+                                  spec=GnnModelSpec.gcn(7, 4, 2))
         # Submit g first, then evict it (capacity=1) before serving.
-        eng.submit(g)
-        eng.submit(other)
+        eng.submit("m", g)
+        eng.submit("m", other)
         eng.drain()
         return next(r for r in eng.records if r.rid == 0)
 
@@ -277,3 +332,34 @@ def test_engine_hw_cost_stable_under_eviction():
     evicted = run_with(capacity=1)
     assert evicted.hw_latency_s == pytest.approx(roomy.hw_latency_s)
     assert evicted.hw_energy_j == pytest.approx(roomy.hw_energy_j)
+
+
+def test_engine_serves_exactly_through_capacity1_cache():
+    """Regression: the evicted-between-submit-and-serve re-derivation path.
+
+    With a capacity-1 PreprocessCache every second submission evicts the
+    first request's entry before it is served.  The pending request carries
+    its own padded arrays, so outputs must stay bit-exact and the hardware
+    numbers must be re-derived (not silently zeroed or mis-keyed).
+    """
+    graphs = [make_graph(30 + s, nv=20 + 4 * s, ne=40 + 10 * s)
+              for s in range(4)]
+    model = build_model("gcn", 7, 2, hidden=4)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = single_model_engine(model, params, task="node",
+                              cfg=GhostConfig(v=8, n=8), slots=2,
+                              prepare_fn=gcn_prepare, cache_capacity=1,
+                              spec=GnnModelSpec.gcn(7, 4, 2))
+    for g in graphs:
+        eng.submit("m", g)   # each submit evicts the previous entry
+    eng.drain()
+    assert len(eng.cache) == 1
+    for i, g in enumerate(graphs):
+        g2, w = gcn_prepare(g)
+        pg = partition_graph(g2, v=8, n=8, edge_weights=w)
+        featp = jnp.asarray(pg.pad_features(g.node_feat))
+        ref = np.asarray(model.apply_blocked(params, to_blocked(pg),
+                                             featp))[: g.num_nodes]
+        np.testing.assert_array_equal(eng.results[i], ref)
+        rec = next(r for r in eng.records if r.rid == i)
+        assert rec.hw_latency_s > 0 and rec.hw_energy_j > 0
