@@ -9,6 +9,12 @@ import time
 import numpy as np
 
 CACHE_DIR = os.path.join(os.path.dirname(__file__), "_cache")
+# Perf-trajectory ledger at the repo root: every BENCH_JSON document is
+# persisted here (keyed by bench name) so successive runs/PRs accumulate
+# comparable numbers instead of scrolling away in CI logs.
+BENCH_JSON_PATH = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_PR5.json")
 RESULTS: list[str] = []
 
 
@@ -16,6 +22,24 @@ def emit(name: str, us_per_call: float, derived):
     line = f"{name},{us_per_call:.1f},{derived}"
     RESULTS.append(line)
     print(line, flush=True)
+
+
+def bench_json(doc: dict) -> dict:
+    """Print the ``BENCH_JSON`` line and persist the document to
+    ``BENCH_PR5.json`` under its ``bench`` name."""
+    print("BENCH_JSON " + json.dumps(doc, default=float), flush=True)
+    try:
+        with open(BENCH_JSON_PATH) as f:
+            ledger = json.load(f)
+        if not isinstance(ledger, dict):
+            ledger = {}
+    except (FileNotFoundError, json.JSONDecodeError):
+        ledger = {}
+    ledger[str(doc.get("bench", "unnamed"))] = doc
+    with open(BENCH_JSON_PATH, "w") as f:
+        json.dump(ledger, f, indent=2, default=float, sort_keys=True)
+        f.write("\n")
+    return doc
 
 
 def timed(fn, *args, repeats: int = 1, **kw):

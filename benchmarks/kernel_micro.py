@@ -1,44 +1,177 @@
-"""Kernel microbenchmarks: block_spmm and quant_matmul wall-times on this
-host (interpret mode on CPU; the numbers are correctness-path timings, the
-TPU roofline story lives in EXPERIMENTS.md §Roofline)."""
+"""Kernel microbenchmarks: block_spmm (unfused vs fused aggregate+combine)
+and quant_matmul wall-times on this host.
+
+On CPU the Pallas kernels run in *interpret* mode, so these are
+correctness-path timings dominated by per-grid-step dispatch — reported
+honestly as such (``"interpret": true`` in BENCH_JSON; the TPU roofline
+story lives in EXPERIMENTS.md §Roofline).  The fused-vs-unfused comparison
+is still meaningful on this axis: fusing the combine into the SpMM epilogue
+removes one grid sweep per extra feature tile plus the separate combine
+dispatch, the interpret-mode analogue of the HBM round-trip it eliminates
+on hardware.
+
+Every variant is timed through ``jax.block_until_ready`` so fused and
+unfused numbers compare completed compute, not async dispatch.
+"""
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, timed
-from repro.core import Graph, ReduceOp, aggregate_blocked, partition_graph, to_blocked
-from repro.kernels import aggregate_blocked_kernel, quantized_matmul_kernel
+from benchmarks.common import bench_json, emit, timed
+from repro.core import (
+    Graph,
+    ReduceOp,
+    aggregate_blocked,
+    aggregate_combine_blocked,
+    aggregate_backend,
+    clear_planner_log,
+    dense_combine,
+    partition_graph,
+    plan_combine_order,
+    planner_decisions,
+    to_blocked,
+)
+from repro.kernels import (
+    aggregate_blocked_kernel,
+    fused_block_spmm_padded,
+    quantized_matmul_kernel,
+)
 from repro.photonic.quant import quantized_matmul
 
 
-def run(quick: bool = True):
+def _make_graph(rng, nv, ne, f):
+    return Graph(edge_src=rng.integers(0, nv, ne).astype(np.int32),
+                 edge_dst=rng.integers(0, nv, ne).astype(np.int32),
+                 node_feat=rng.standard_normal((nv, f)).astype(np.float32)
+                 ).validate()
+
+
+def _timed_blocked(fn, repeats):
+    """Time fn with a warm-up call, blocking on the result every iteration."""
+    jax.block_until_ready(fn())  # warm-up: compile/trace outside the window
+    return timed(lambda: jax.block_until_ready(fn()), repeats=repeats)
+
+
+def run_fused_comparison(nv, ne, f_in, f_out, v, n, repeats=2) -> dict:
+    """Fused vs unfused aggregate+combine on one non-trivial shape.
+
+    ``f_in`` is chosen > one lane tile (128) so the unfused kernel sweeps
+    the block list once per feature tile while the fused kernel sweeps it
+    once in total; the aggregate-first order is forced for the kernel
+    comparison, and the planner's auto decision is reported alongside.
+    """
+    rng = np.random.default_rng(7)
+    g = _make_graph(rng, nv, ne, f_in)
+    pg = partition_graph(g, v=v, n=n)
+    bg = to_blocked(pg)
+    featp = jnp.asarray(pg.pad_features(g.node_feat))
+    w = jnp.asarray(rng.standard_normal((f_in, f_out)).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal((f_out,)).astype(np.float32))
+    shape_tag = f"nv={nv};tiles={pg.stats.nonzero_tiles};f={f_in}->{f_out}"
+
+    # jnp oracle (aggregate-first), the correctness reference.
+    ref, us_oracle = _timed_blocked(
+        lambda: dense_combine(aggregate_blocked(bg, featp, ReduceOp.SUM), w, b),
+        repeats)
+    emit("kernel/agg_combine_jnp_oracle", us_oracle, shape_tag)
+
+    # Unfused Pallas: block_spmm kernel + separate dense combine.
+    def unfused():
+        h = aggregate_blocked_kernel(pg, featp, block_f=128, interpret=True)
+        return dense_combine(h, w, b)
+
+    out_unfused, us_unfused = _timed_blocked(unfused, repeats)
+    emit("kernel/agg_combine_pallas_unfused", us_unfused, shape_tag)
+
+    # Fused Pallas: combine in the SpMM epilogue, aggregate-first forced.
+    def fused():
+        return fused_block_spmm_padded(
+            bg.blocks, bg.block_row, bg.block_col, featp, w, b, None,
+            bg.num_dst_groups, interpret=True)
+
+    out_fused, us_fused = _timed_blocked(fused, repeats)
+    speedup = us_unfused / us_fused if us_fused else 0.0
+    emit("kernel/agg_combine_pallas_fused", us_fused,
+         f"{shape_tag};speedup_vs_unfused={speedup:.2f}")
+
+    max_err = float(jnp.abs(out_fused - ref).max())
+    plan = plan_combine_order(bg, f_in, f_out)
+
+    # The planner's auto decision end-to-end (records into the plan log).
+    clear_planner_log()
+    with aggregate_backend("pallas_fused"):
+        _, us_auto = _timed_blocked(
+            lambda: aggregate_combine_blocked(bg, featp, w, b,
+                                              reduce=ReduceOp.SUM),
+            repeats)
+    emit("kernel/agg_combine_planner_auto", us_auto,
+         f"order={plan.order}")
+
+    return {
+        "shape": {"nv": nv, "ne": ne, "f_in": f_in, "f_out": f_out,
+                  "v": v, "n": n, "nonzero_tiles": pg.stats.nonzero_tiles},
+        "us_jnp_oracle": us_oracle,
+        "us_pallas_unfused": us_unfused,
+        "us_pallas_fused": us_fused,
+        "us_planner_auto": us_auto,
+        "fused_vs_unfused_speedup": speedup,
+        "fused_max_abs_err_vs_oracle": max_err,
+        "planner": plan.to_dict(),
+        "planner_decisions": planner_decisions(),
+    }
+
+
+def run(quick: bool = True, smoke: bool = False):
     rng = np.random.default_rng(0)
-    nv, ne, f = (400, 2000, 128) if quick else (2000, 10000, 512)
-    g = Graph(edge_src=rng.integers(0, nv, ne).astype(np.int32),
-              edge_dst=rng.integers(0, nv, ne).astype(np.int32),
-              node_feat=rng.standard_normal((nv, f)).astype(np.float32)
-              ).validate()
+    if smoke:
+        nv, ne, f = 120, 600, 16
+        fused_shape = (120, 600, 160, 32, 8, 8)
+        repeats = 1
+    elif quick:
+        nv, ne, f = 400, 2000, 128
+        fused_shape = (400, 2000, 256, 64, 20, 20)
+        repeats = 2
+    else:
+        nv, ne, f = 2000, 10000, 512
+        fused_shape = (2000, 10000, 512, 128, 20, 20)
+        repeats = 2
+    g = _make_graph(rng, nv, ne, f)
     pg = partition_graph(g, v=20, n=20)
     featp = jnp.asarray(pg.pad_features(g.node_feat))
 
-    out, us = timed(lambda: np.asarray(
-        aggregate_blocked_kernel(pg, featp, block_f=128, interpret=True)),
-        repeats=2)
-    emit("kernel/block_spmm_interp", us,
+    _, us_interp = _timed_blocked(
+        lambda: aggregate_blocked_kernel(pg, featp, block_f=128,
+                                         interpret=True), repeats)
+    emit("kernel/block_spmm_interp", us_interp,
          f"tiles={pg.stats.nonzero_tiles};skip={pg.stats.skipped_fraction:.2f}")
 
     bg = to_blocked(pg)
-    out, us = timed(lambda: np.asarray(
-        aggregate_blocked(bg, featp, ReduceOp.SUM)), repeats=3)
-    emit("kernel/block_spmm_jnp_ref", us, "oracle")
+    _, us_jnp = _timed_blocked(
+        lambda: aggregate_blocked(bg, featp, ReduceOp.SUM), repeats + 1)
+    emit("kernel/block_spmm_jnp_ref", us_jnp, "oracle")
 
-    m, k, n = (128, 256, 128) if quick else (512, 1024, 512)
+    fused_doc = run_fused_comparison(*fused_shape, repeats=repeats)
+
+    m, k, n = (64, 128, 64) if smoke else (
+        (128, 256, 128) if quick else (512, 1024, 512))
     x = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32))
     w = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32))
-    _, us = timed(lambda: np.asarray(
-        quantized_matmul_kernel(x, w, interpret=True)), repeats=2)
+    _, us = _timed_blocked(
+        lambda: quantized_matmul_kernel(x, w, interpret=True), repeats)
     emit("kernel/quant_matmul_interp", us, f"{m}x{k}x{n}")
-    _, us = timed(lambda: np.asarray(quantized_matmul(x, w)), repeats=3)
+    _, us = _timed_blocked(lambda: quantized_matmul(x, w), repeats + 1)
     emit("kernel/quant_matmul_jnp_ref", us, "oracle")
+
+    return bench_json({
+        "bench": "kernel_micro",
+        "interpret": True,
+        "note": "CPU interpret-mode timings: per-grid-step dispatch "
+                "dominates; fused-vs-unfused compares completed compute "
+                "(block_until_ready) on the same shape",
+        "us_block_spmm_interp": us_interp,
+        "us_block_spmm_jnp_ref": us_jnp,
+        "fused": fused_doc,
+    })

@@ -48,9 +48,15 @@ def main() -> None:
     if args.smoke:
         if args.only or args.full:
             ap.error("--smoke is a fixed tiny suite; drop --only/--full")
-        suites = {"serving": lambda quick: serving_throughput.run(
-            quick=True, requests=12, working_set=4, slots=4,
-            ticks=16, arrivals=4)}
+        suites = {
+            "serving": lambda quick: serving_throughput.run(
+                quick=True, requests=12, working_set=4, slots=4,
+                ticks=16, arrivals=4),
+            # Tiny fused-vs-unfused kernel comparison so BENCH_JSON perf
+            # regressions in the Pallas path are caught on every PR too.
+            "kernels": lambda quick: kernel_micro.run(quick=True,
+                                                      smoke=True),
+        }
     selected = (args.only.split(",") if args.only else list(suites))
 
     print("name,us_per_call,derived")

@@ -1,6 +1,7 @@
-"""Serving-throughput benchmark: engine vs naive loop, FIFO vs occupancy.
+"""Serving-throughput benchmark: engine vs naive loop, FIFO vs occupancy,
+fused vs unfused Pallas backends.
 
-Two measurements, folded into one BENCH JSON document:
+Three measurements, folded into one BENCH JSON document:
 
   1. Single-model closed loop (engine vs the naive re-partition-per-request
      baseline) — the PR 3 numbers, kept for trend continuity.
@@ -11,10 +12,15 @@ Two measurements, folded into one BENCH JSON document:
      compilation stays out of the timed window); occupancy forms fuller
      batches and therefore serves more requests in the same budget, while
      its age bound keeps the maximum queue wait finite.
+  3. Fused-vs-unfused backend A/B: the same closed loop served by
+     ``backend="pallas"`` (block_spmm + separate combine) and
+     ``backend="pallas_fused"`` (fused aggregate+combine epilogue kernel),
+     with the combination-order planner's trace-time decisions attached.
 
-Emits the usual ``name,us,derived`` CSV lines plus:
-
-  BENCH_JSON {"bench": "serving_throughput", ..., "mixed": {...}}
+Emits the usual ``name,us,derived`` CSV lines plus a BENCH_JSON line
+(``{"bench": "serving_throughput", ..., "mixed": {...},
+"fused_vs_unfused": {...}}``) that also persists to BENCH_PR5.json at the
+repo root (see benchmarks.common.bench_json).
 
 Run:  PYTHONPATH=src python benchmarks/serving_throughput.py [--requests N]
 """
@@ -22,7 +28,6 @@ Run:  PYTHONPATH=src python benchmarks/serving_throughput.py [--requests N]
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import sys
 import time
@@ -31,13 +36,19 @@ import jax
 import numpy as np
 
 try:
-    from benchmarks.common import emit
+    from benchmarks.common import bench_json, emit
 except ModuleNotFoundError:
     # Standalone invocation (python benchmarks/serving_throughput.py):
     # put the repo root on the path so the package import resolves.
     sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
-    from benchmarks.common import emit
-from repro.core import Graph, partition_graph, to_blocked
+    from benchmarks.common import bench_json, emit
+from repro.core import (
+    Graph,
+    clear_planner_log,
+    partition_graph,
+    planner_decisions,
+    to_blocked,
+)
 from repro.gnn import build_model
 from repro.photonic.perf import GhostConfig, GnnModelSpec
 from repro.serving import GnnServeEngine
@@ -76,6 +87,72 @@ def _naive_loop(model, params, stream, cfg) -> float:
         out = model.apply_blocked(params, to_blocked(pg), featp)
         jax.block_until_ready(out)
     return time.perf_counter() - t0
+
+
+# ---------------------------------------------------------------------------
+# Fused vs unfused Pallas executors: the same closed-loop stream served by a
+# backend="pallas" engine (unfused block_spmm + separate combine) and a
+# backend="pallas_fused" engine (fused aggregate+combine epilogue kernel with
+# combination-order planning).  Both engines are pre-warmed so the timed
+# window compares steady-state serving, and the planner's trace-time order
+# decisions are snapshotted from the warm-up (traces are cached afterwards).
+# CPU note: both backends run the kernels in interpret mode, so the gap
+# reflects grid-sweep count + dispatch, not HBM traffic — reported as such.
+# ---------------------------------------------------------------------------
+
+
+def _warmed_engine_run(backend: str, model, params, stream, cfg,
+                       slots: int) -> dict:
+    engine = GnnServeEngine(cfg=cfg, slots=slots, backend=backend)
+    engine.register("gcn", model, params, task="node")
+    engine.run(stream)          # warm-up: compile every (bucket) trace
+    engine.reset_metrics()
+    report = engine.run(stream)
+    return {"req_per_s": report.req_per_s,
+            "p50_latency_ms": report.p50_latency_ms,
+            "traces_compiled": report.traces_compiled}
+
+
+def run_fused_vs_unfused(requests: int, working_set: int, slots: int,
+                         f: int = 136, hidden: int = 136) -> dict:
+    # f > one lane tile (128) and hidden >= f so the hot first layer is
+    # aggregate-first (fused-kernel territory): the unfused backend sweeps
+    # the tile list once per 128-wide feature tile plus a separate combine,
+    # the fused backend sweeps it once.  The planner still routes the
+    # narrow output layer combine-first on both backends.
+    stream = _request_stream(requests, working_set, f, seed=3)
+    model = build_model("gcn", f, 3, hidden=hidden)
+    params = model.init(jax.random.PRNGKey(1))
+    cfg = GhostConfig()
+
+    clear_planner_log()
+    results = {}
+    for backend in ("pallas", "pallas_fused"):
+        results[backend] = _warmed_engine_run(backend, model, params, stream,
+                                              cfg, slots)
+        emit(f"serving/{backend}",
+             0.0 if not results[backend]["req_per_s"] else
+             1e6 / results[backend]["req_per_s"],
+             f"req_s={results[backend]['req_per_s']:.1f}")
+    decisions = planner_decisions()
+    return {
+        "interpret": True,
+        "note": "CPU interpret-mode A/B: the fused epilogue matmuls run "
+                "interpreted per destination row while the unfused combine "
+                "is one compiled XLA matmul, so ratios near/below 1.0 here "
+                "reflect interpreter dispatch, not the HBM-traffic saving "
+                "the fusion targets; see kernel_micro BENCH_JSON for the "
+                "kernel-level fused-vs-unfused comparison on one shape",
+        "requests": requests,
+        "pallas": results["pallas"],
+        "pallas_fused": results["pallas_fused"],
+        "fused_vs_unfused_req_per_s": (
+            results["pallas_fused"]["req_per_s"]
+            / results["pallas"]["req_per_s"]
+            if results["pallas"]["req_per_s"] else 0.0),
+        "planner_decisions": decisions,
+        "planner_orders": sorted({d["order"] for d in decisions}),
+    }
 
 
 # ---------------------------------------------------------------------------
@@ -193,6 +270,7 @@ def run_mixed(ticks: int, arrivals_per_tick: int, working_set: int,
 def run(quick: bool = True, requests: int | None = None,
         working_set: int = 10, slots: int = 8, backend: str = "jnp",
         include_naive: bool = True, include_mixed: bool = True,
+        include_fused: bool = True,
         ticks: int | None = None, arrivals: int | None = None,
         max_waiting: int = 64) -> dict:
     requests = requests or (32 if quick else 256)
@@ -241,8 +319,13 @@ def run(quick: bool = True, requests: int | None = None,
             arrivals_per_tick=arrivals or 8,
             working_set=max(4, working_set // 2),
             slots=slots, backend=backend, max_waiting=max_waiting)
-    print("BENCH_JSON " + json.dumps(doc, default=float))
-    return doc
+    if include_fused:
+        # Interpret-mode Pallas serving is slow on CPU; keep this closed
+        # loop small — it is a backend A/B, not a throughput measurement.
+        doc["fused_vs_unfused"] = run_fused_vs_unfused(
+            requests=min(requests, 12 if quick else 48),
+            working_set=min(working_set, 4), slots=min(slots, 4))
+    return bench_json(doc)
 
 
 def main():
@@ -250,12 +333,15 @@ def main():
     ap.add_argument("--requests", type=int, default=None)
     ap.add_argument("--working-set", type=int, default=10)
     ap.add_argument("--slots", type=int, default=8)
-    ap.add_argument("--backend", choices=("jnp", "pallas"), default="jnp")
+    ap.add_argument("--backend", choices=("jnp", "pallas", "pallas_fused"),
+                    default="jnp")
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--no-naive", action="store_true",
                     help="skip the naive-loop baseline timing")
     ap.add_argument("--no-mixed", action="store_true",
                     help="skip the mixed-catalog FIFO-vs-occupancy trace")
+    ap.add_argument("--no-fused", action="store_true",
+                    help="skip the fused-vs-unfused Pallas backend A/B")
     ap.add_argument("--ticks", type=int, default=None,
                     help="mixed-catalog open-loop tick budget")
     ap.add_argument("--arrivals", type=int, default=None,
@@ -269,8 +355,9 @@ def main():
     run(quick=not args.full, requests=args.requests,
         working_set=args.working_set, slots=args.slots,
         backend=args.backend, include_naive=not args.no_naive,
-        include_mixed=not args.no_mixed, ticks=args.ticks,
-        arrivals=args.arrivals, max_waiting=args.max_waiting)
+        include_mixed=not args.no_mixed, include_fused=not args.no_fused,
+        ticks=args.ticks, arrivals=args.arrivals,
+        max_waiting=args.max_waiting)
 
 
 if __name__ == "__main__":

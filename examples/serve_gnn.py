@@ -36,7 +36,8 @@ def main():
                     help="continuous-batching width R")
     ap.add_argument("--working-set", type=int, default=12,
                     help="distinct graphs per dataset the stream cycles over")
-    ap.add_argument("--backend", choices=("jnp", "pallas"), default="jnp")
+    ap.add_argument("--backend", choices=("jnp", "pallas", "pallas_fused"),
+                    default="jnp")
     ap.add_argument("--scheduler", choices=("fifo", "occupancy"),
                     default="occupancy")
     ap.add_argument("--max-waiting", type=int, default=None,

@@ -3,14 +3,23 @@ from repro.core.graph import Graph
 from repro.core.partition import PartitionedGraph, PartitionStats, partition_graph
 from repro.core.aggregate import (
     AGGREGATE_BACKENDS,
+    COMBINE_ORDERS,
     BlockedGraph,
+    CombinePlan,
     ReduceOp,
     active_aggregate_backend,
     aggregate_backend,
     aggregate_blocked,
+    aggregate_combine_blocked,
     aggregate_edges,
     attention_aggregate_blocked,
+    blocked_degrees,
+    clear_planner_log,
+    dense_combine,
+    plan_combine_order,
+    planner_decisions,
     to_blocked,
+    with_degrees,
 )
 from repro.core.greta import ExecutionOrder, GretaSpec, run_layer_blocked, run_layer_edges
 from repro.core.combine import CombineConfig, combine, linear

@@ -11,15 +11,28 @@ Two numerically-equivalent backends:
   kernel in ``repro.kernels.block_spmm`` implements the same contraction with
   explicit VMEM tiling; this jnp version is its oracle and the CPU fallback.
 
+On top of the plain aggregation, ``aggregate_combine_blocked`` runs a whole
+aggregate+combine stage pair (the GReTA reduce->transform step) through a
+static **order planner**: it picks aggregate-first vs combine-first from the
+tile FLOP counts (combine-first shrinks the SpMM width whenever
+``F_out < F_in`` — GHOST's own transform-first GAT ordering, applied
+cost-wise to every layer), and on the ``pallas_fused`` backend it lowers the
+aggregate-first order to the fused SpMM+combine epilogue kernel in
+``repro.kernels.fused_block_spmm`` so the aggregated intermediate never
+round-trips through HBM.
+
 Reduce ops: SUM / MEAN / MAX, matching the paper's reduce-unit modes (plain
 coherent summation, the trailing 1/n MR, and the optical comparator).
+MEAN degrees are graph-static: ``to_blocked`` precomputes them once per
+graph (``BlockedGraph.deg``) so no forward pass re-reduces the tiles.
 """
 
 from __future__ import annotations
 
 import contextlib
 import enum
-from typing import NamedTuple
+import threading
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -35,40 +48,60 @@ class ReduceOp(str, enum.Enum):
 
 
 # ---------------------------------------------------------------------------
-# Backend selection: "jnp" (einsum/segment ops, the oracle) or "pallas" (the
-# block_spmm kernel in repro.kernels; interpret mode on CPU).  The serving
-# engine flips this per-executor; layers and models stay backend-agnostic.
+# Backend selection: "jnp" (einsum/segment ops, the oracle), "pallas" (the
+# unfused block_spmm kernel; interpret mode on CPU), or "pallas_fused"
+# (block_spmm for plain aggregations + the fused aggregate+combine kernel
+# inside aggregate_combine_blocked).  The serving engine flips this
+# per-executor; layers and models stay backend-agnostic.  The stack is
+# thread-local so a threaded intake path can never race one executor's
+# selection against another's.
 # ---------------------------------------------------------------------------
 
-_BACKEND_STACK: list[str] = ["jnp"]
-AGGREGATE_BACKENDS = ("jnp", "pallas")
+_BACKEND_TLS = threading.local()
+AGGREGATE_BACKENDS = ("jnp", "pallas", "pallas_fused")
+_PALLAS_BACKENDS = ("pallas", "pallas_fused")
+
+
+def _backend_stack() -> list:
+    stack = getattr(_BACKEND_TLS, "stack", None)
+    if stack is None:
+        stack = _BACKEND_TLS.stack = ["jnp"]
+    return stack
 
 
 def active_aggregate_backend() -> str:
-    return _BACKEND_STACK[-1]
+    return _backend_stack()[-1]
 
 
 @contextlib.contextmanager
 def aggregate_backend(name: str):
-    """Route ``aggregate_blocked`` SUM/MEAN through the chosen backend.
+    """Route blocked SUM/MEAN aggregation through the chosen backend.
 
     The selection is read at trace time, so wrapping a jit'd call site routes
     every blocked aggregation inside that trace.  MAX always uses the jnp
     path (the Pallas kernel is an SpMM; the optical comparator has no MXU
-    analogue).
+    analogue).  Selections are per-thread: pushing a backend in one thread
+    is invisible to every other thread.
     """
     if name not in AGGREGATE_BACKENDS:
         raise ValueError(f"unknown aggregate backend '{name}'; "
                          f"expected one of {AGGREGATE_BACKENDS}")
-    _BACKEND_STACK.append(name)
+    stack = _backend_stack()
+    stack.append(name)
     try:
         yield
     finally:
-        _BACKEND_STACK.pop()
+        stack.pop()
 
 
 class BlockedGraph(NamedTuple):
-    """Device-resident view of a PartitionedGraph (static shapes)."""
+    """Device-resident view of a PartitionedGraph (static shapes).
+
+    ``deg`` holds the per-destination-row MEAN-reduce degrees.  Degree is
+    graph-static, so it is computed once (``to_blocked`` for host graphs;
+    ``with_degrees`` inside a serving trace) and reused by every layer and
+    backend instead of being re-reduced from the tiles on each forward.
+    """
 
     blocks: jax.Array      # [B, V, N]
     block_row: jax.Array   # [B]
@@ -78,9 +111,16 @@ class BlockedGraph(NamedTuple):
     v: int
     n: int
     num_nodes: int
+    deg: Optional[jax.Array] = None  # [G_dst * V] or None (derive on demand)
 
 
 def to_blocked(pg: PartitionedGraph) -> BlockedGraph:
+    # Degree = sum of tile entries: multiplicities of duplicate edges were
+    # accumulated into the tile values at partition time, so this matches
+    # the edge-list backend's per-edge count exactly.  Hoisted here (once
+    # per graph) because it is structure-only data.
+    deg = np.zeros((pg.num_dst_groups, pg.v), np.float32)
+    np.add.at(deg, pg.block_row, pg.blocks.sum(axis=2, dtype=np.float32))
     return BlockedGraph(
         blocks=jnp.asarray(pg.blocks),
         block_row=jnp.asarray(pg.block_row),
@@ -90,7 +130,31 @@ def to_blocked(pg: PartitionedGraph) -> BlockedGraph:
         v=pg.v,
         n=pg.n,
         num_nodes=pg.num_nodes,
+        deg=jnp.asarray(deg.reshape(-1)),
     )
+
+
+def blocked_degrees(bg: BlockedGraph) -> jax.Array:
+    """Per-destination-row degrees [G_dst * V] (precomputed or derived)."""
+    if bg.deg is not None:
+        return bg.deg
+    deg_partial = bg.blocks.sum(axis=2)                        # [B, V]
+    deg = jax.ops.segment_sum(deg_partial, bg.block_row,
+                              num_segments=bg.num_dst_groups)
+    return deg.reshape(bg.num_dst_groups * bg.v)
+
+
+def with_degrees(bg: BlockedGraph) -> BlockedGraph:
+    """Attach the degree vector so downstream layers share one reduction.
+
+    Used by serving executors whose BlockedGraphs are built from batched
+    device arrays (no host PartitionedGraph to hoist from): calling this
+    once at trace entry makes every MEAN layer in the model reuse a single
+    segment-sum instead of re-deriving degrees per layer.
+    """
+    if bg.deg is not None:
+        return bg
+    return bg._replace(deg=blocked_degrees(bg))
 
 
 # ---------------------------------------------------------------------------
@@ -148,18 +212,20 @@ def aggregate_blocked(
     f = feat_padded.shape[-1]
 
     def mean_normalize(out):
-        # Degree = sum of tile entries: multiplicities of duplicate edges
-        # were accumulated into the tile values at partition time, so this
-        # matches the edge-list backend's per-edge count exactly.  Shared by
-        # both backends — their MEAN semantics must never drift apart.
-        deg_partial = bg.blocks.sum(axis=2).astype(out.dtype)  # [B,V]
-        deg = jax.ops.segment_sum(deg_partial, bg.block_row,
-                                  num_segments=bg.num_dst_groups)
-        deg = deg.reshape(bg.num_dst_groups * bg.v)
-        return out / jnp.maximum(deg, 1.0)[:, None]
+        # Shared by all backends — their MEAN semantics must never drift
+        # apart.  Degrees come precomputed with the graph when available
+        # (structure-static; see BlockedGraph.deg).  Normalization is an
+        # explicit reciprocal-multiply, NOT a divide: when deg is a trace
+        # constant XLA rewrites x/deg into x*(1/deg) anyway, so writing the
+        # multiply keeps constant-deg and traced-deg programs (serving
+        # reference vs executor) bit-identical, and matches the fused
+        # kernel's epilogue exactly.
+        deg = blocked_degrees(bg).astype(out.dtype)
+        inv = 1.0 / jnp.maximum(deg, 1.0)
+        return out * inv[:, None]
 
-    if active_aggregate_backend() == "pallas" and reduce in (ReduceOp.SUM,
-                                                             ReduceOp.MEAN):
+    if active_aggregate_backend() in _PALLAS_BACKENDS and reduce in (
+            ReduceOp.SUM, ReduceOp.MEAN):
         # Lazy import: kernels.ops imports core.partition; importing it at
         # module scope would cycle through core/__init__.
         from repro.kernels.ops import block_spmm_padded
@@ -192,6 +258,204 @@ def aggregate_blocked(
         return jnp.where(jnp.isfinite(out), out, 0.0)
 
     raise ValueError(f"unknown reduce {reduce}")
+
+
+# ---------------------------------------------------------------------------
+# Fused aggregate+combine with combination-order planning.
+#
+# The GReTA reduce->transform pair admits two execution orders (paper
+# Section 3.4.2 applies it to GAT; the FLOP argument applies everywhere):
+#
+#   aggregate_first:  (A X) W    SpMM over F_in,  dense combine to F_out
+#   combine_first:    A (X W)    dense combine to F_out, SpMM over F_out
+#
+# Linearity makes them mathematically identical for SUM, and for MEAN too
+# (D^-1 A (X W) == (D^-1 A X) W — the degree scale is per-row).  The planner
+# picks the cheaper order from static tile counts; the serving engine's
+# "pallas_fused" backend additionally lowers the aggregate-first order onto
+# the fused epilogue kernel so the [G_dst*V, F_in] intermediate never
+# touches HBM.
+# ---------------------------------------------------------------------------
+
+COMBINE_ORDERS = ("auto", "aggregate_first", "combine_first")
+
+
+class CombinePlan(NamedTuple):
+    """Static cost breakdown behind one order decision (roofline inputs)."""
+
+    order: str                     # "aggregate_first" | "combine_first"
+    flops_aggregate_first: int     # 2*B*V*N*F_in + 2*G_dst*V*F_in*F_out
+    flops_combine_first: int       # 2*G_src*N*F_in*F_out + 2*B*V*N*F_out
+    fused_hbm_bytes_saved: int     # the [G_dst*V, F_in] fp32 write+read the
+                                   # fused epilogue eliminates (agg-first)
+
+    def to_dict(self) -> dict:
+        return dict(self._asdict())
+
+
+_PLAN_TLS = threading.local()
+
+
+def _plan_log() -> dict:
+    log = getattr(_PLAN_TLS, "log", None)
+    if log is None:
+        log = _PLAN_TLS.log = {}
+    return log
+
+
+def planner_decisions() -> list:
+    """Order decisions recorded at trace time, one dict per distinct
+    (tile geometry, F_in, F_out, reduce, backend) site — benchmark/report
+    fodder, deduplicated so jit retraces don't grow it."""
+    return [
+        {"blocks": k[0], "v": k[1], "n": k[2], "g_dst": k[3], "g_src": k[4],
+         "f_in": k[5], "f_out": k[6], "reduce": k[7], "backend": k[8],
+         **plan.to_dict()}
+        for k, plan in _plan_log().items()
+    ]
+
+
+def clear_planner_log() -> None:
+    _plan_log().clear()
+
+
+def plan_combine_order(bg: BlockedGraph, f_in: int, f_out: int,
+                       order: str = "auto") -> CombinePlan:
+    """Choose the aggregate/combine execution order from static FLOPs.
+
+    All inputs are trace-time constants (tile counts and feature widths),
+    so the decision is static per jit trace — no data-dependent control
+    flow enters the compiled program.  ``order`` overrides the choice.
+    """
+    if order not in COMBINE_ORDERS:
+        raise ValueError(f"unknown combine order '{order}'; "
+                         f"expected one of {COMBINE_ORDERS}")
+    b = int(bg.blocks.shape[0])
+    spmm_flops_in = 2 * b * bg.v * bg.n * f_in
+    spmm_flops_out = 2 * b * bg.v * bg.n * f_out
+    dense_after = 2 * bg.num_dst_groups * bg.v * f_in * f_out
+    dense_before = 2 * bg.num_src_groups * bg.n * f_in * f_out
+    agg_first = spmm_flops_in + dense_after
+    comb_first = dense_before + spmm_flops_out
+    if order == "auto":
+        order = "aggregate_first" if agg_first <= comb_first else "combine_first"
+    return CombinePlan(
+        order=order,
+        flops_aggregate_first=agg_first,
+        flops_combine_first=comb_first,
+        fused_hbm_bytes_saved=2 * bg.num_dst_groups * bg.v * f_in * 4,
+    )
+
+
+def _record_plan(bg: BlockedGraph, f_in: int, f_out: int, reduce: ReduceOp,
+                 backend: str, plan: CombinePlan) -> None:
+    key = (int(bg.blocks.shape[0]), bg.v, bg.n, bg.num_dst_groups,
+           bg.num_src_groups, f_in, f_out, str(reduce.value), backend)
+    _plan_log()[key] = plan
+
+
+# The one epilogue-activation vocabulary, shared with the fused kernel
+# (repro.kernels.fused_block_spmm imports this table): every name here must
+# be implemented identically by _apply_activation below (XLA path) and by
+# apply_epilogue_activation in the kernel (in-kernel path), so backend
+# choice can never change the supported or computed activation set.
+EPILOGUE_ACTIVATIONS = ("none", "relu", "elu")
+
+
+def _apply_activation(y: jax.Array, activation: Optional[str]) -> jax.Array:
+    if activation in (None, "none"):
+        return y
+    if activation == "relu":
+        return jax.nn.relu(y)
+    if activation == "elu":
+        return jax.nn.elu(y)
+    raise ValueError(f"unknown activation '{activation}'; "
+                     f"expected one of {EPILOGUE_ACTIVATIONS}")
+
+
+def dense_combine(x: jax.Array, w: jax.Array, bias: Optional[jax.Array] = None,
+                  activation: Optional[str] = None,
+                  quantized: bool = False) -> jax.Array:
+    """The combine-block transform: act(x @ w + bias).
+
+    The one combine implementation every layer path shares — the fused
+    kernel's epilogue, the combine-first projection (including GAT's
+    transform-first W h), and the unfused fallback all reduce to this map.
+    ``quantized`` routes through the photonic 8-bit sign-split MVM.
+    """
+    if quantized:
+        from repro.photonic.quant import QuantConfig, quantized_matmul
+
+        y = quantized_matmul(x, w, QuantConfig())
+    else:
+        y = x @ w
+    if bias is not None:
+        y = y + bias
+    return _apply_activation(y, activation)
+
+
+def aggregate_combine_blocked(
+    bg: BlockedGraph,
+    feat_padded: jax.Array,        # [G_src * N, F_in]
+    w: jax.Array,                  # [F_in, F_out]
+    bias: Optional[jax.Array] = None,
+    reduce: ReduceOp = ReduceOp.SUM,
+    activation: Optional[str] = None,
+    order: str = "auto",
+    quantized: bool = False,
+) -> jax.Array:
+    """One aggregate+combine stage pair with order planning and fusion.
+
+    Computes ``act(reduce_agg(bg, feat) @ w + bias)`` — the body of every
+    aggregate-first GNN layer — choosing the execution order statically
+    (see ``plan_combine_order``) and, on the ``pallas_fused`` backend,
+    running the aggregate-first order through the fused Pallas kernel.
+
+    Fallbacks, all numerically anchored to the jnp oracle:
+      * MAX reduce — no SpMM form exists, so aggregate (jnp comparator
+        path) then combine densely.
+      * ``quantized`` — the int8 combine is nonlinear, so fusing/reordering
+        around it would change semantics; aggregate first, then the
+        sign-split MVM, exactly like the pre-fusion layers.
+
+    Returns [G_dst * V, F_out].
+    """
+    f_in = feat_padded.shape[-1]
+    f_out = w.shape[-1]
+    if reduce == ReduceOp.MAX or quantized:
+        h = aggregate_blocked(bg, feat_padded, reduce)
+        return dense_combine(h, w, bias, activation, quantized)
+
+    backend = active_aggregate_backend()
+    plan = plan_combine_order(bg, f_in, f_out, order)
+    _record_plan(bg, f_in, f_out, reduce, backend, plan)
+
+    if plan.order == "combine_first":
+        # Narrow the SpMM width first; the blocked aggregation then runs on
+        # whichever backend is active (incl. the unfused Pallas kernel).
+        xw = dense_combine(feat_padded, w)
+        h = aggregate_blocked(bg, xw, reduce)
+        if bias is not None:
+            h = h + bias
+        return _apply_activation(h, activation)
+
+    if backend == "pallas_fused":
+        # Lazy import: kernels.ops imports core.partition (cycle guard).
+        from repro.kernels.ops import fused_block_spmm_padded
+
+        inv_deg = None
+        if reduce == ReduceOp.MEAN:
+            deg = blocked_degrees(bg).astype(feat_padded.dtype)
+            inv_deg = 1.0 / jnp.maximum(deg, 1.0)
+        out = fused_block_spmm_padded(
+            bg.blocks, bg.block_row, bg.block_col, feat_padded, w, bias,
+            inv_deg, bg.num_dst_groups,
+            activation=activation if activation else "none",
+        )
+        return out.astype(feat_padded.dtype)
+
+    h = aggregate_blocked(bg, feat_padded, reduce)
+    return dense_combine(h, w, bias, activation)
 
 
 def attention_aggregate_blocked(

@@ -6,6 +6,16 @@ Each conv exposes the two execution backends:
   apply_blocked — GHOST V x N blocked backend (serving; numerically equal)
 
 and an optional quantized combine (the photonic 8-bit sign-split MVM).
+
+Every ``apply_blocked`` aggregate+combine pair routes through
+``core.aggregate.aggregate_combine_blocked``: the static order planner
+picks aggregate-first vs combine-first per layer, and the ``pallas_fused``
+serving backend lowers the aggregate-first order onto the fused SpMM+combine
+epilogue kernel.  GAT is transform-first by construction; its projection is
+the same ``dense_combine`` map the planner's combine-first leg uses.
+Quantized combines stay on the unfused aggregate-then-int8-MVM path — the
+sign-split quantizer is nonlinear, so reordering around it would change the
+served numerics.
 """
 
 from __future__ import annotations
@@ -19,13 +29,13 @@ import jax.numpy as jnp
 from repro.core.aggregate import (
     BlockedGraph,
     ReduceOp,
+    active_aggregate_backend,
     aggregate_blocked,
+    aggregate_combine_blocked,
     aggregate_edges,
     attention_aggregate_blocked,
+    dense_combine,
 )
-from repro.photonic.quant import QuantConfig, quantized_matmul
-
-
 def init_linear(key, f_in: int, f_out: int, bias: bool = True) -> dict:
     wkey, _ = jax.random.split(key)
     scale = (2.0 / (f_in + f_out)) ** 0.5
@@ -35,17 +45,8 @@ def init_linear(key, f_in: int, f_out: int, bias: bool = True) -> dict:
     return p
 
 
-def _matmul(x, w, quantized: bool):
-    if quantized:
-        return quantized_matmul(x, w, QuantConfig())
-    return x @ w
-
-
 def _linear(x, p, quantized: bool):
-    y = _matmul(x, p["w"], quantized)
-    if "b" in p:
-        y = y + p["b"]
-    return y
+    return dense_combine(x, p["w"], p.get("b"), quantized=quantized)
 
 
 def _to_dst_rows(x, pad_dst: int):
@@ -75,9 +76,11 @@ class GCNConv:
 
     @staticmethod
     def apply_blocked(p, bg: BlockedGraph, feat_padded, quantized=False):
-        # GCN normalization is baked into the partition blocks.
-        h = aggregate_blocked(bg, feat_padded, ReduceOp.SUM)
-        return _linear(h, p, quantized)
+        # GCN normalization is baked into the partition blocks; the whole
+        # layer is one planner-ordered (and optionally fused) stage pair.
+        return aggregate_combine_blocked(
+            bg, feat_padded, p["w"], p.get("b"), reduce=ReduceOp.SUM,
+            quantized=quantized)
 
 
 # ---------------------------------------------------------------------------
@@ -100,9 +103,13 @@ class SAGEConv:
 
     @staticmethod
     def apply_blocked(p, bg: BlockedGraph, feat_padded, quantized=False):
-        h = aggregate_blocked(bg, feat_padded, ReduceOp.MEAN)
+        # Neighbor term = MEAN-aggregate fused with the (bias-free) W_neigh
+        # combine; the self term stays a plain dense map on its own rows.
+        h = aggregate_combine_blocked(
+            bg, feat_padded, p["neigh"]["w"], reduce=ReduceOp.MEAN,
+            quantized=quantized)
         self_feat = _to_dst_rows(feat_padded, bg.num_dst_groups * bg.v)
-        return _linear(self_feat, p["self"], quantized) + _linear(h, p["neigh"], quantized)
+        return _linear(self_feat, p["self"], quantized) + h
 
 
 # ---------------------------------------------------------------------------
@@ -135,9 +142,28 @@ class GINConv:
 
     @staticmethod
     def apply_blocked(p, bg: BlockedGraph, feat_padded, quantized=False):
-        h = aggregate_blocked(bg, feat_padded, ReduceOp.SUM)
         self_feat = _to_dst_rows(feat_padded, bg.num_dst_groups * bg.v)
-        return GINConv._mlp(p, (1.0 + p["eps"]) * self_feat + h, quantized)
+        if quantized or active_aggregate_backend() != "pallas_fused":
+            # Unfused form.  Quantized: the int8 MVM quantizes its input, so
+            # W1 cannot be distributed over the (self, aggregate) sum
+            # without changing numerics.  jnp/pallas: distributing W1 buys
+            # nothing without the fused epilogue, and keeping the seed
+            # association preserves the engine's batched-vs-unbatched
+            # bit-exactness for GIN's magnitude-amplifying sum-pool readout.
+            h = aggregate_blocked(bg, feat_padded, ReduceOp.SUM)
+            return GINConv._mlp(p, (1.0 + p["eps"]) * self_feat + h, quantized)
+        # Distribute the first MLP layer over the sum so its combine fuses
+        # with the aggregation:  ((1+eps)x + h) W1 + b1
+        #                     == (1+eps)(x W1) + (h W1) + b1.
+        mlp0 = p["mlp"][0]
+        h_w = aggregate_combine_blocked(bg, feat_padded, mlp0["w"],
+                                        reduce=ReduceOp.SUM)
+        x = (1.0 + p["eps"]) * (self_feat @ mlp0["w"]) + h_w
+        if "b" in mlp0:
+            x = x + mlp0["b"]
+        for layer in p["mlp"][1:]:
+            x = _linear(jax.nn.relu(x), layer, quantized)
+        return x
 
 
 # ---------------------------------------------------------------------------
@@ -160,9 +186,12 @@ class GATConv:
 
     @staticmethod
     def _project(p, feat, quantized):
+        # GAT is transform-first (paper Section 3.4.2): the projection IS
+        # the combine-first order, so it runs through the shared combine map
+        # rather than a private matmul.
         heads, f_out = p["a_src"].shape
         w2d = p["w"].reshape(feat.shape[-1], heads * f_out)
-        wh = _matmul(feat, w2d, quantized)
+        wh = dense_combine(feat, w2d, quantized=quantized)
         return wh.reshape(feat.shape[0], heads, f_out)
 
     @staticmethod

@@ -1,9 +1,13 @@
-# Pallas TPU kernels for the paper's two compute hot-spots:
-#   block_spmm   — blocked-sparse aggregation (GHOST aggregate stage)
-#   quant_matmul — int8 sign-split MVM (GHOST combine stage)
+# Pallas TPU kernels for the paper's compute hot-spots:
+#   block_spmm        — blocked-sparse aggregation (GHOST aggregate stage)
+#   fused_block_spmm  — aggregation with the combine matmul (+bias/activation)
+#                       fused into the SpMM epilogue, so the aggregated
+#                       intermediate never round-trips through HBM
+#   quant_matmul      — int8 sign-split MVM (GHOST combine stage)
 # ops.py holds the jit'd wrappers (interpret=True on CPU); ref.py the oracles.
 from repro.kernels.ops import (
     aggregate_blocked_kernel,
     block_spmm_padded,
+    fused_block_spmm_padded,
     quantized_matmul_kernel,
 )

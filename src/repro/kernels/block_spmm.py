@@ -28,6 +28,15 @@ Grid: (F // bf, num_blocks).  VMEM working set per step:
   blocks tile  V x N
   feature tile N x bf
   output tile  V x bf
+
+This kernel writes the aggregated intermediate [G_dst*V, F] to HBM, which
+the combine matmul then reads straight back.  When a combine follows the
+aggregation, prefer ``fused_block_spmm`` (same scalar-prefetch/CSR-sorted
+design, combine folded into the epilogue so the accumulator never leaves
+VMEM) via ``core.aggregate.aggregate_combine_blocked``, which also plans
+the aggregate-first vs combine-first execution order; this unfused kernel
+remains the right tool for bare aggregations (no trailing combine), for
+MAX-adjacent paths, and as the combine-first order's SpMM over F_out.
 """
 
 from __future__ import annotations

@@ -1,0 +1,179 @@
+"""Pallas TPU kernel: fused blocked-sparse aggregation + combine epilogue.
+
+GHOST runs aggregate and combine as separate pipeline stages; the blocked
+TPU port in ``block_spmm.py`` mirrors that literally and therefore writes
+the aggregated intermediate ``[G_dst*V, F_in]`` to HBM before the dense
+combine matmul reads it straight back.  This kernel fuses the combine into
+the SpMM epilogue (the standard GNN-accelerator fusion, cf. Zhang et al.
+arXiv 2306.14052 / VersaGNN arXiv 2105.01280): the per-row aggregation
+accumulator never leaves VMEM, and on the *last* visit to an output row it
+is multiplied by the resident weight tile (plus bias and an optional
+activation) before the only HBM write — ``[V, F_out]`` instead of
+``[V, F_in]`` + a later round-trip.
+
+Dataflow (extends the scalar-prefetch/CSR-sorted ``block_spmm`` design):
+
+* ``block_row`` / ``block_col`` are scalar-prefetched into SMEM; the
+  BlockSpec index maps steer the HBM->VMEM DMAs so all-zero adjacency
+  tiles are never fetched (GHOST's zero-block skipping).
+* Tiles must be CSR-sorted by destination row (``partition_graph``'s
+  default fetch order).  Consecutive grid steps that share a destination
+  row accumulate into a VMEM *scratch* buffer ``acc[V, F_in]``; the buffer
+  is zeroed on the first visit to each row (``@pl.when``) and consumed by
+  the combine epilogue on the last.
+* The weight tile ``[F_in, F_out]`` and bias row use constant index maps,
+  so Pallas keeps them VMEM-resident across the whole grid — they are
+  DMA'd once, exactly like weights in the canonical fused-matmul pattern.
+* MEAN reduction folds in as a per-row scale of the accumulator by the
+  precomputed inverse degree (graph-static; see
+  ``core.aggregate.blocked_degrees``) *before* the combine matmul, which
+  matches the unfused oracle's normalize-then-combine order.
+
+Grid: (num_blocks,).  VMEM working set per step:
+  adjacency tile   V x N
+  feature tile     N x F_in   (full feature width; the combine epilogue
+                               needs the complete row accumulator, so the
+                               feature dim is not grid-tiled — when F_in is
+                               large the order planner in core.aggregate
+                               prefers combine-first and this kernel runs
+                               over the narrower F_out instead)
+  weight tile      F_in x F_out   (resident)
+  accumulator      V x F_in       (scratch, fp32)
+  output tile      V x F_out
+
+The epilogue math per destination row r:
+
+  out[r] = act( (acc[r] * inv_deg[r]) @ W + bias )
+
+Destination groups with no tiles are never visited; the wrapper in
+``kernels.ops`` patches them to ``act(bias)`` — exactly what the unfused
+oracle produces for an all-zero aggregation row.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Shared vocabulary with the XLA-side _apply_activation (single source of
+# truth, so the fused and unfused paths can never drift apart in what they
+# accept).  This import cannot cycle: core.aggregate only reaches back into
+# kernels lazily, inside functions.
+from repro.core.aggregate import EPILOGUE_ACTIVATIONS
+
+
+def apply_epilogue_activation(y: jax.Array, activation: str) -> jax.Array:
+    """In-kernel (Pallas-safe) twin of core.aggregate._apply_activation."""
+    if activation == "relu":
+        return jnp.maximum(y, 0.0)
+    if activation == "elu":
+        return jnp.where(y > 0.0, y, jnp.expm1(y))
+    return y
+
+
+def _kernel(block_row, block_col, blocks_ref, feat_ref, w_ref, bias_ref,
+            invdeg_ref, out_ref, acc_ref, *, num_blocks: int,
+            activation: str, apply_deg: bool):
+    b = pl.program_id(0)
+
+    first_visit = jnp.logical_or(
+        b == 0, block_row[jnp.maximum(b, 1) - 1] != block_row[b]
+    )
+    # CSR row-sorted tiles: the final grid step is always the last visit to
+    # its (maximal) destination row, so clamping the lookahead is safe.
+    last_visit = jnp.logical_or(
+        b == num_blocks - 1,
+        block_row[jnp.minimum(b + 1, num_blocks - 1)] != block_row[b],
+    )
+
+    @pl.when(first_visit)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        blocks_ref[...],
+        feat_ref[...].astype(blocks_ref.dtype),
+        preferred_element_type=jnp.float32,
+    ).astype(acc_ref.dtype)
+
+    @pl.when(last_visit)
+    def _combine():
+        acc = acc_ref[...]
+        if apply_deg:  # MEAN: normalize before combine, like the oracle
+            acc = acc * invdeg_ref[...]
+        y = jnp.dot(acc, w_ref[...].astype(acc.dtype),
+                    preferred_element_type=jnp.float32)
+        y = y + bias_ref[...].astype(y.dtype)
+        out_ref[...] = apply_epilogue_activation(y, activation).astype(
+            out_ref.dtype)
+
+
+def fused_block_spmm(
+    blocks: jax.Array,      # [B, V, N] tile values (CSR-sorted by row)
+    block_row: jax.Array,   # [B] int32 destination-group ids (non-decreasing)
+    block_col: jax.Array,   # [B] int32 source-group ids
+    feat: jax.Array,        # [G_src * N, F_in] padded source features
+    w: jax.Array,           # [F_in, F_out] combine weights
+    bias: jax.Array,        # [1, F_out] combine bias (zeros when unused)
+    inv_deg: jax.Array,     # [G_dst * V, 1] inverse degrees (ones for SUM)
+    num_dst_groups: int,
+    activation: str = "none",
+    apply_deg: bool = False,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused out[r*V:(r+1)*V] = act((sum_b blocks[b] @ feat_tile) @ W + bias).
+
+    Returns [num_dst_groups * V, F_out].  Feature/weight dims must already
+    be lane-padded (see ops.fused_block_spmm_padded for the padding and the
+    unvisited-row patch-up).
+    """
+    num_blocks, v, n = blocks.shape
+    f_in = feat.shape[1]
+    f_out = w.shape[1]
+    if w.shape[0] != f_in:
+        raise ValueError(f"weight rows {w.shape[0]} != feature dim {f_in}")
+    if feat.shape[0] % n:
+        raise ValueError("feat rows must be a multiple of the tile width N")
+    if activation not in EPILOGUE_ACTIVATIONS:
+        raise ValueError(f"unknown epilogue activation '{activation}'; "
+                         f"expected one of {EPILOGUE_ACTIVATIONS}")
+
+    # Roofline accounting for the scheduler: one SpMM visit per tile plus
+    # one combine matmul per destination row (num_dst_groups upper bound).
+    cost = pl.CostEstimate(
+        flops=2 * num_blocks * v * n * f_in
+        + 2 * num_dst_groups * v * f_in * f_out,
+        bytes_accessed=4 * (num_blocks * (v * n + n * f_in)
+                            + f_in * f_out + num_dst_groups * v * f_out),
+        transcendentals=0,
+    )
+
+    kernel = functools.partial(_kernel, num_blocks=num_blocks,
+                               activation=activation, apply_deg=apply_deg)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(num_blocks,),
+            in_specs=[
+                pl.BlockSpec((None, v, n), lambda b, br, bc: (b, 0, 0)),
+                pl.BlockSpec((n, f_in), lambda b, br, bc: (bc[b], 0)),
+                pl.BlockSpec((f_in, f_out), lambda b, br, bc: (0, 0)),
+                pl.BlockSpec((1, f_out), lambda b, br, bc: (0, 0)),
+                pl.BlockSpec((v, 1), lambda b, br, bc: (br[b], 0)),
+            ],
+            out_specs=pl.BlockSpec(
+                (v, f_out), lambda b, br, bc: (br[b], 0)
+            ),
+            scratch_shapes=[pltpu.VMEM((v, f_in), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((num_dst_groups * v, f_out),
+                                       feat.dtype),
+        cost_estimate=cost,
+        interpret=interpret,
+    )(block_row, block_col, blocks, feat, w, bias, inv_deg)
+    return out

@@ -18,6 +18,10 @@ import jax.numpy as jnp
 
 from repro.core.partition import PartitionedGraph
 from repro.kernels.block_spmm import block_spmm
+from repro.kernels.fused_block_spmm import (
+    apply_epilogue_activation,
+    fused_block_spmm,
+)
 from repro.kernels.quant_matmul import quant_matmul
 from repro.kernels import ref
 from repro.photonic.quant import QuantConfig, compute_scale, quantize, quantize_weights
@@ -61,6 +65,58 @@ def block_spmm_padded(
     visited = jnp.zeros((num_dst_groups,), jnp.bool_).at[block_row].set(True)
     out = jnp.where(jnp.repeat(visited, v)[:, None], out, 0.0)
     return out[:, :f]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_dst_groups", "activation", "lane", "interpret"),
+)
+def fused_block_spmm_padded(
+    blocks: jax.Array,          # [B, V, N] CSR-row-sorted tiles
+    block_row: jax.Array,       # [B] int32, non-decreasing
+    block_col: jax.Array,       # [B] int32
+    feat: jax.Array,            # [G_src * N, F_in]
+    w: jax.Array,               # [F_in, F_out]
+    bias: jax.Array | None,     # [F_out] or None
+    inv_deg: jax.Array | None,  # [G_dst * V] inverse degrees (MEAN) or None
+    num_dst_groups: int,
+    activation: str = "none",
+    lane: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """fused_block_spmm with lane padding + unvisited-row patch-up.
+
+    Pads F_in/F_out to ``lane`` multiples (zero feature columns x zero
+    weight rows contribute nothing; padded output columns are sliced off),
+    runs the fused kernel, and rewrites never-visited destination groups to
+    ``act(bias)`` — the value the unfused oracle assigns to an all-zero
+    aggregation row.  Returns [G_dst * V, F_out].
+    """
+    interpret = auto_interpret() if interpret is None else interpret
+    f_in, f_out = w.shape
+    v = blocks.shape[1]
+    featp = _pad_to(feat, 1, lane)
+    wp = _pad_to(_pad_to(w, 0, lane), 1, lane)
+    fout_p = wp.shape[1]
+    bias_row = (jnp.zeros((f_out,), feat.dtype) if bias is None
+                else bias.astype(feat.dtype))
+    biasp = _pad_to(bias_row.reshape(1, f_out), 1, lane)
+    apply_deg = inv_deg is not None
+    invd = (jnp.ones((num_dst_groups * v, 1), feat.dtype) if not apply_deg
+            else inv_deg.reshape(num_dst_groups * v, 1).astype(feat.dtype))
+
+    out = fused_block_spmm(
+        blocks, block_row, block_col, featp, wp, biasp, invd,
+        num_dst_groups, activation=activation, apply_deg=apply_deg,
+        interpret=interpret,
+    )[:, :f_out]
+    # Destination groups with no tiles are never visited by the kernel, so
+    # their output blocks are uninitialized; the oracle maps their all-zero
+    # aggregation rows through the epilogue, i.e. to act(bias).
+    visited = jnp.zeros((num_dst_groups,), jnp.bool_).at[block_row].set(True)
+    fill = apply_epilogue_activation(bias_row.astype(jnp.float32),
+                                     activation).astype(out.dtype)
+    return jnp.where(jnp.repeat(visited, v)[:, None], out, fill[None, :])
 
 
 def aggregate_blocked_kernel(pg_or_bg, feat_padded: jax.Array,

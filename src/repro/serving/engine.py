@@ -23,7 +23,9 @@ one substrate — the serving-side analogue of GHOST's versatility claim
 Each tick gathers up to ``slots`` waiting requests from the chosen group,
 stacks their bucket-padded tile arrays into ``[R, B, V, N]`` (features into
 ``[R, rows, bucket.f]``), and runs one vmapped blocked forward — via the
-Pallas ``block_spmm`` kernel (interpret mode on CPU) or the jnp oracle.
+jnp oracle, the unfused Pallas ``block_spmm`` kernel, or the fused
+aggregate+combine ``fused_block_spmm`` kernel with combination-order
+planning (``backend="pallas_fused"``; interpret mode on CPU).
 
 Executor numerics: zero padding tiles, rows, and feature columns are exact
 no-ops (see serving/bucketing.py; executors slice features back to the
@@ -106,8 +108,10 @@ class GnnServeEngine:
       flags: OrchFlags for the analytic hardware model.
       slots: batch width R; every executor call runs exactly R slots (free
         slots are zero-filled) so each (model, bucket) compiles exactly once.
-      backend: "jnp" oracle or "pallas" kernel for SUM/MEAN aggregation
-        (MAX and attention always take the jnp path inside the trace).
+      backend: "jnp" oracle, "pallas" (unfused block_spmm kernel), or
+        "pallas_fused" (fused aggregate+combine epilogue kernel with
+        combination-order planning) for SUM/MEAN aggregation (MAX and
+        attention always take the jnp path inside the trace).
       scheduler: "fifo" | "occupancy" | a Scheduler instance.
       max_waiting: bound on the waiting queue (None = unbounded).
       admission_policy: "reject" (turn the new request away) or

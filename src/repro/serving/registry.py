@@ -33,6 +33,7 @@ from repro.core.aggregate import (
     AGGREGATE_BACKENDS,
     BlockedGraph,
     aggregate_backend,
+    with_degrees,
 )
 from repro.serving.bucketing import Bucket
 
@@ -129,7 +130,13 @@ class ModelRegistry:
 
 
 class ExecutorPool:
-    """Compiled vmapped blocked forwards, one per (model_id, bucket)."""
+    """Compiled vmapped blocked forwards, one per (model_id, bucket).
+
+    ``backend`` selects the aggregation lowering baked into every trace the
+    pool builds: "jnp" (oracle), "pallas" (unfused block_spmm), or
+    "pallas_fused" (fused aggregate+combine epilogue kernel; the layer-level
+    order planner then decides aggregate-first vs combine-first per layer).
+    """
 
     def __init__(self, slots: int, backend: str):
         if slots < 1:
@@ -177,6 +184,13 @@ class ExecutorPool:
                 num_src_groups=bucket.num_src_groups,
                 v=bucket.v, n=bucket.n, num_nodes=num_nodes,
             )
+            # Degrees are structure-static: reduce them once per forward so
+            # every MEAN layer in the model shares the result (XLA drops the
+            # reduction entirely for models that never read it).
+            bg = with_degrees(bg)
+            # The backend selection (jnp oracle / unfused Pallas kernel /
+            # fused aggregate+combine kernel) is read at trace time, so it
+            # bakes into this executor's compiled program.
             with aggregate_backend(backend):
                 if task == "graph":
                     return model.node_embed_blocked(params, bg, feat,

@@ -1,0 +1,338 @@
+"""Fused aggregate+combine kernel + combination-order planner tests.
+
+Covers the PR-5 contract: the fused Pallas kernel (interpret mode on CPU)
+against the unfused jnp oracle across reduce ops and padding shapes,
+combine-first vs aggregate-first numerical equivalence, clean MAX/quantized
+fallbacks, zero-edge graphs, degree hoisting, thread-local backend
+selection, and the four GNN layer types end-to-end.
+"""
+
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    Graph,
+    ReduceOp,
+    active_aggregate_backend,
+    aggregate_backend,
+    aggregate_blocked,
+    aggregate_combine_blocked,
+    blocked_degrees,
+    clear_planner_log,
+    dense_combine,
+    partition_graph,
+    plan_combine_order,
+    planner_decisions,
+    to_blocked,
+    with_degrees,
+)
+from repro.gnn import build_model
+from repro.kernels import fused_block_spmm_padded
+
+
+def _setup(seed, nv, ne, f_in, f_out, v=8, n=8, gcn_norm=False):
+    rng = np.random.default_rng(seed)
+    g = Graph(
+        edge_src=rng.integers(0, nv, ne).astype(np.int32),
+        edge_dst=rng.integers(0, nv, ne).astype(np.int32),
+        node_feat=rng.standard_normal((nv, f_in)).astype(np.float32),
+    ).validate()
+    if gcn_norm:
+        g = g.with_self_loops()
+        pg = partition_graph(g, v=v, n=n, edge_weights=g.gcn_edge_weights())
+    else:
+        pg = partition_graph(g, v=v, n=n)
+    bg = to_blocked(pg)
+    featp = jnp.asarray(pg.pad_features(g.node_feat))
+    w = jnp.asarray(rng.standard_normal((f_in, f_out)).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal((f_out,)).astype(np.float32))
+    return g, pg, bg, featp, w, b
+
+
+def _oracle(bg, featp, w, b, reduce):
+    """The unfused jnp reference: aggregate, then densely combine."""
+    return dense_combine(aggregate_blocked(bg, featp, reduce), w, b)
+
+
+# ---------------------------------------------------------------------------
+# Fused kernel vs the jnp oracle.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("reduce", [ReduceOp.SUM, ReduceOp.MEAN])
+@pytest.mark.parametrize("nv,ne,f_in,f_out", [
+    (64, 280, 32, 16),
+    (50, 200, 20, 48),    # f_out > f_in (aggregate-first territory)
+    (37, 90, 13, 7),      # odd widths: both dims exercise lane padding
+    (100, 500, 129, 5),   # f_in just past one lane tile
+])
+def test_fused_matches_oracle(reduce, nv, ne, f_in, f_out):
+    _, _, bg, featp, w, b = _setup(0, nv, ne, f_in, f_out)
+    ref = _oracle(bg, featp, w, b, reduce)
+    with aggregate_backend("pallas_fused"):
+        got = aggregate_combine_blocked(bg, featp, w, b, reduce=reduce,
+                                        order="aggregate_first")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_fused_no_bias_and_relu_epilogue():
+    _, _, bg, featp, w, _ = _setup(1, 48, 220, 16, 12)
+    ref = jax.nn.relu(dense_combine(aggregate_blocked(
+        bg, featp, ReduceOp.SUM), w))
+    with aggregate_backend("pallas_fused"):
+        got = aggregate_combine_blocked(bg, featp, w, reduce=ReduceOp.SUM,
+                                        activation="relu",
+                                        order="aggregate_first")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=1e-5)
+
+
+def test_fused_direct_wrapper_unvisited_rows_get_bias():
+    """Destination groups with no tiles must come out as act(bias), exactly
+    like the oracle's all-zero aggregation rows."""
+    nv = 40
+    src = np.arange(10, dtype=np.int32)
+    dst = np.full(10, 39, np.int32)   # everything lands in the last group
+    g = Graph(edge_src=src, edge_dst=dst,
+              node_feat=np.random.default_rng(2)
+              .standard_normal((nv, 6)).astype(np.float32)).validate()
+    pg = partition_graph(g, v=8, n=8)
+    bg = to_blocked(pg)
+    featp = jnp.asarray(pg.pad_features(g.node_feat))
+    rng = np.random.default_rng(3)
+    w = jnp.asarray(rng.standard_normal((6, 4)).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal((4,)).astype(np.float32))
+    got = fused_block_spmm_padded(bg.blocks, bg.block_row, bg.block_col,
+                                  featp, w, b, None, bg.num_dst_groups,
+                                  interpret=True)
+    ref = _oracle(bg, featp, w, b, ReduceOp.SUM)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=1e-5)
+    # The first four groups hold no edges: bias rows exactly.
+    np.testing.assert_array_equal(np.asarray(got[:32]),
+                                  np.broadcast_to(np.asarray(b), (32, 4)))
+
+
+@pytest.mark.parametrize("reduce", [ReduceOp.SUM, ReduceOp.MEAN])
+def test_fused_zero_edge_graph(reduce):
+    g = Graph(edge_src=np.zeros(0, np.int32), edge_dst=np.zeros(0, np.int32),
+              node_feat=np.random.default_rng(4)
+              .standard_normal((11, 5)).astype(np.float32)).validate()
+    pg = partition_graph(g, v=4, n=4)
+    assert pg.stats.nonzero_tiles == 0
+    bg = to_blocked(pg)
+    featp = jnp.asarray(pg.pad_features(g.node_feat))
+    rng = np.random.default_rng(5)
+    w = jnp.asarray(rng.standard_normal((5, 3)).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal((3,)).astype(np.float32))
+    ref = _oracle(bg, featp, w, b, reduce)     # == bias everywhere
+    with aggregate_backend("pallas_fused"):
+        got = aggregate_combine_blocked(bg, featp, w, b, reduce=reduce,
+                                        order="aggregate_first")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.broadcast_to(np.asarray(b), ref.shape),
+                               atol=1e-6)
+
+
+def test_max_reduce_falls_back_cleanly():
+    """MAX has no SpMM form: the fused backend must produce the comparator
+    path's numbers, not crash or silently mis-lower."""
+    _, _, bg, featp, w, b = _setup(6, 45, 180, 10, 6)
+    ref = _oracle(bg, featp, w, b, ReduceOp.MAX)
+    with aggregate_backend("pallas_fused"):
+        got = aggregate_combine_blocked(bg, featp, w, b, reduce=ReduceOp.MAX)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=1e-6)
+
+
+def test_quantized_falls_back_to_unfused_path():
+    """The int8 sign-split combine is nonlinear; fused/ reordered execution
+    must not change served quantized numerics."""
+    _, _, bg, featp, w, b = _setup(7, 45, 180, 12, 8)
+    ref = dense_combine(aggregate_blocked(bg, featp, ReduceOp.SUM), w, b,
+                        quantized=True)
+    with aggregate_backend("pallas_fused"):
+        got = aggregate_combine_blocked(bg, featp, w, b,
+                                        reduce=ReduceOp.SUM, quantized=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Combination-order planning.
+# ---------------------------------------------------------------------------
+
+
+def test_combine_first_equals_aggregate_first():
+    for reduce in (ReduceOp.SUM, ReduceOp.MEAN):
+        _, _, bg, featp, w, b = _setup(8, 60, 300, 24, 10)
+        ref = aggregate_combine_blocked(bg, featp, w, b, reduce=reduce,
+                                        order="aggregate_first")
+        got = aggregate_combine_blocked(bg, featp, w, b, reduce=reduce,
+                                        order="combine_first")
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   atol=1e-5, rtol=1e-5)
+        with aggregate_backend("pallas_fused"):
+            got_fused = aggregate_combine_blocked(bg, featp, w, b,
+                                                  reduce=reduce,
+                                                  order="combine_first")
+        np.testing.assert_allclose(np.asarray(got_fused), np.asarray(ref),
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_planner_prefers_narrow_spmm_width():
+    _, _, bg, featp, _, _ = _setup(9, 60, 300, 32, 8)
+    shrink = plan_combine_order(bg, f_in=32, f_out=8)
+    grow = plan_combine_order(bg, f_in=8, f_out=32)
+    assert shrink.order == "combine_first"
+    assert grow.order == "aggregate_first"
+    # Override wins regardless of cost.
+    forced = plan_combine_order(bg, f_in=32, f_out=8, order="aggregate_first")
+    assert forced.order == "aggregate_first"
+    with pytest.raises(ValueError):
+        plan_combine_order(bg, 8, 8, order="bogus")
+    # The FLOP model is symmetric in the SpMM widths it trades.
+    assert shrink.flops_aggregate_first > shrink.flops_combine_first
+    assert grow.flops_aggregate_first < grow.flops_combine_first
+
+
+def test_planner_decisions_are_recorded_and_deduped():
+    clear_planner_log()
+    _, _, bg, featp, w, b = _setup(10, 40, 160, 16, 4)
+    for _ in range(3):  # repeats must not grow the log
+        aggregate_combine_blocked(bg, featp, w, b)
+    decisions = planner_decisions()
+    assert len(decisions) == 1
+    d = decisions[0]
+    assert d["order"] == "combine_first"       # 16 -> 4 shrinks the width
+    assert d["f_in"] == 16 and d["f_out"] == 4
+    assert d["fused_hbm_bytes_saved"] == bg.num_dst_groups * bg.v * 16 * 4 * 2
+    clear_planner_log()
+    assert planner_decisions() == []
+
+
+# ---------------------------------------------------------------------------
+# Degree hoisting.
+# ---------------------------------------------------------------------------
+
+
+def test_to_blocked_precomputes_degrees():
+    g, pg, bg, featp, _, _ = _setup(11, 50, 260, 8, 8)
+    assert bg.deg is not None
+    # Hoisted degrees == the edge-list in-degree count (multiplicity-aware).
+    deg_ref = np.zeros(pg.padded_dst, np.float32)
+    np.add.at(deg_ref, g.edge_dst, 1.0)
+    np.testing.assert_allclose(np.asarray(bg.deg), deg_ref, atol=1e-6)
+    # MEAN through the precomputed path == MEAN with degrees re-derived.
+    bare = bg._replace(deg=None)
+    np.testing.assert_allclose(
+        np.asarray(aggregate_blocked(bg, featp, ReduceOp.MEAN)),
+        np.asarray(aggregate_blocked(bare, featp, ReduceOp.MEAN)),
+        atol=1e-6)
+    np.testing.assert_allclose(np.asarray(blocked_degrees(bare)),
+                               deg_ref, atol=1e-6)
+    assert with_degrees(bare).deg is not None
+    assert with_degrees(bg) is bg  # no-op when already attached
+
+
+# ---------------------------------------------------------------------------
+# Thread-local backend selection.
+# ---------------------------------------------------------------------------
+
+
+def test_backend_selection_is_thread_local():
+    seen = {}
+    barrier = threading.Barrier(2)
+
+    def worker(name, backend):
+        with aggregate_backend(backend):
+            barrier.wait(timeout=10)       # both threads inside their ctx
+            seen[name] = active_aggregate_backend()
+            barrier.wait(timeout=10)
+
+    t1 = threading.Thread(target=worker, args=("a", "pallas"))
+    t2 = threading.Thread(target=worker, args=("b", "pallas_fused"))
+    t1.start(); t2.start(); t1.join(); t2.join()
+    assert seen == {"a": "pallas", "b": "pallas_fused"}
+    assert active_aggregate_backend() == "jnp"  # main thread untouched
+
+
+def test_backend_in_spawned_thread_defaults_to_jnp():
+    result = {}
+    with aggregate_backend("pallas_fused"):
+        t = threading.Thread(
+            target=lambda: result.update(b=active_aggregate_backend()))
+        t.start(); t.join()
+    assert result["b"] == "jnp"
+
+
+# ---------------------------------------------------------------------------
+# Layer-level equivalence: the four model types under the fused backend.
+# ---------------------------------------------------------------------------
+
+
+def test_serving_engine_pallas_fused_backend_bit_exact():
+    """An engine on backend='pallas_fused' serves values bit-identical to
+    the jitted unbatched apply_blocked under the same backend (batching and
+    bucket padding add no drift, same as the other backends)."""
+    from repro.photonic.perf import GhostConfig
+    from repro.serving import GnnServeEngine
+
+    rng = np.random.default_rng(13)
+    f = 6
+    model = build_model("sage", f, 3, hidden=8)   # MEAN: exercises inv_deg
+    params = model.init(jax.random.PRNGKey(0))
+    eng = GnnServeEngine(cfg=GhostConfig(n=8, v=8), slots=2,
+                         backend="pallas_fused")
+    eng.register("sage", model, params, task="node", f_in=f)
+    graphs = []
+    for seed in range(3):
+        nv = 10 + 7 * seed
+        ne = 4 * nv
+        graphs.append(Graph(
+            edge_src=rng.integers(0, nv, ne).astype(np.int32),
+            edge_dst=rng.integers(0, nv, ne).astype(np.int32),
+            node_feat=rng.standard_normal((nv, f)).astype(np.float32),
+        ).validate())
+        eng.submit("sage", graphs[-1])
+    eng.drain()
+    for i, g in enumerate(graphs):
+        pg = partition_graph(g, v=8, n=8)
+        featp = jnp.asarray(pg.pad_features(g.node_feat))
+        bgs = to_blocked(pg)  # closed over: its geometry stays static
+        with aggregate_backend("pallas_fused"):
+            ref = np.asarray(jax.jit(
+                lambda p, f: model.apply_blocked(p, bgs, f)
+            )(params, featp))[: g.num_nodes]
+        np.testing.assert_array_equal(eng.results[i], ref)
+
+
+@pytest.mark.parametrize("name,kw", [
+    ("gcn", dict(hidden=16)),
+    ("sage", dict(hidden=16)),
+    ("gin", dict(hidden=8)),
+    ("gat", dict(hidden=4, heads=2)),
+])
+def test_layer_types_fused_vs_jnp_oracle(name, kw):
+    f_in, nv, ne = 12, 50, 240
+    rng = np.random.default_rng(12)
+    g = Graph(edge_src=rng.integers(0, nv, ne).astype(np.int32),
+              edge_dst=rng.integers(0, nv, ne).astype(np.int32),
+              node_feat=rng.standard_normal((nv, f_in)).astype(np.float32)
+              ).validate()
+    if name == "gcn":
+        g = g.with_self_loops()
+        pg = partition_graph(g, v=8, n=8, edge_weights=g.gcn_edge_weights())
+    else:
+        pg = partition_graph(g, v=8, n=8)
+    bg = to_blocked(pg)
+    featp = jnp.asarray(pg.pad_features(g.node_feat))
+    model = build_model(name, f_in, 3, **kw)
+    params = model.init(jax.random.PRNGKey(0))
+    ref = model.apply_blocked(params, bg, featp)
+    with aggregate_backend("pallas_fused"):
+        got = model.apply_blocked(params, bg, featp)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=1e-5, rtol=1e-5)

@@ -167,7 +167,7 @@ def test_cache_transform_runs_once():
 # ---------------------------------------------------------------------------
 
 
-@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+@pytest.mark.parametrize("backend", ["jnp", "pallas", "pallas_fused"])
 def test_engine_matches_unbatched_blocked_forward_exactly(backend):
     graphs = [make_graph(s) for s in range(6)]
     graphs += graphs[:3]  # repeats -> cache hits
@@ -192,7 +192,7 @@ def test_engine_matches_unbatched_blocked_forward_exactly(backend):
         np.testing.assert_array_equal(eng.results[i], ref)
 
 
-@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+@pytest.mark.parametrize("backend", ["jnp", "pallas", "pallas_fused"])
 def test_engine_graph_task_gin_exact(backend):
     graphs = [make_graph(s, f=6, labeled=True) for s in range(5)]
     model = build_model("gin", 6, 2, hidden=8, mlp_layers=2)
@@ -204,9 +204,23 @@ def test_engine_graph_task_gin_exact(backend):
     for i, g in enumerate(graphs):
         pg = partition_graph(g, v=5, n=7)
         featp = jnp.asarray(pg.pad_features(g.node_feat))
+        bgs = to_blocked(pg)
+        # The reference is the *jitted* unbatched blocked forward — the
+        # engine's documented exactness contract (eager execution may
+        # differ from any jitted run by a ULP, which GIN's sum-pool
+        # readout amplifies to visible magnitude).
         with aggregate_backend(backend):
-            ref = np.asarray(model.apply_blocked(params, to_blocked(pg), featp))
-        np.testing.assert_array_equal(eng.results[i], ref)
+            ref = np.asarray(jax.jit(
+                lambda p, f: model.apply_blocked(p, bgs, f))(params, featp))
+        if backend == "pallas_fused":
+            # pallas_fused distributes GIN's first MLP layer over the
+            # (self, aggregate) sum; XLA associates those adds differently
+            # in the batched and unbatched programs, and the sum-pool
+            # readout amplifies the per-node ULPs — so the graph-task
+            # contract on this backend is few-ULP relative, not bitwise.
+            np.testing.assert_allclose(eng.results[i], ref, rtol=1e-6)
+        else:
+            np.testing.assert_array_equal(eng.results[i], ref)
 
 
 def test_engine_trace_count_is_bounded_by_buckets():
