@@ -9,12 +9,14 @@ import time
 import numpy as np
 
 CACHE_DIR = os.path.join(os.path.dirname(__file__), "_cache")
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 # Perf-trajectory ledger at the repo root: every BENCH_JSON document is
 # persisted here (keyed by bench name) so successive runs/PRs accumulate
-# comparable numbers instead of scrolling away in CI logs.
-BENCH_JSON_PATH = os.path.join(
-    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-    "BENCH_PR5.json")
+# comparable numbers instead of scrolling away in CI logs.  PR-agnostic
+# name; the PR 5 era wrote BENCH_PR5.json, whose entries are migrated into
+# this file on first write (then the legacy file is retired).
+BENCH_JSON_PATH = os.path.join(_REPO_ROOT, "BENCH.json")
+_LEGACY_BENCH_PATHS = (os.path.join(_REPO_ROOT, "BENCH_PR5.json"),)
 RESULTS: list[str] = []
 
 
@@ -24,21 +26,47 @@ def emit(name: str, us_per_call: float, derived):
     print(line, flush=True)
 
 
-def bench_json(doc: dict) -> dict:
-    """Print the ``BENCH_JSON`` line and persist the document to
-    ``BENCH_PR5.json`` under its ``bench`` name."""
-    print("BENCH_JSON " + json.dumps(doc, default=float), flush=True)
+def environment_stamp() -> dict:
+    """Fields every BENCH_JSON document carries, so ledger entries from
+    different machines/backends are never compared as like-for-like:
+    device kind, jax version, and whether Pallas ran in interpret mode."""
+    import jax  # deferred: common.py is imported by non-jax tooling too
+
+    dev = jax.devices()[0]
+    return {
+        "device_kind": f"{dev.platform}:{dev.device_kind}",
+        "jax_version": jax.__version__,
+        "interpret": jax.default_backend() != "tpu",
+    }
+
+
+def _load_ledger(path: str) -> dict:
     try:
-        with open(BENCH_JSON_PATH) as f:
+        with open(path) as f:
             ledger = json.load(f)
-        if not isinstance(ledger, dict):
-            ledger = {}
+        return ledger if isinstance(ledger, dict) else {}
     except (FileNotFoundError, json.JSONDecodeError):
-        ledger = {}
+        return {}
+
+
+def bench_json(doc: dict) -> dict:
+    """Stamp ``doc`` with the environment, print the ``BENCH_JSON`` line,
+    and persist it to ``BENCH.json`` under its ``bench`` name (migrating
+    any legacy per-PR ledger entries on the way)."""
+    doc = {**environment_stamp(), **doc}
+    print("BENCH_JSON " + json.dumps(doc, default=float), flush=True)
+    ledger = _load_ledger(BENCH_JSON_PATH)
+    for legacy in _LEGACY_BENCH_PATHS:
+        # Legacy entries only fill holes: the new ledger always wins.
+        for name, entry in _load_ledger(legacy).items():
+            ledger.setdefault(name, entry)
     ledger[str(doc.get("bench", "unnamed"))] = doc
     with open(BENCH_JSON_PATH, "w") as f:
         json.dump(ledger, f, indent=2, default=float, sort_keys=True)
         f.write("\n")
+    for legacy in _LEGACY_BENCH_PATHS:
+        if os.path.exists(legacy):
+            os.remove(legacy)
     return doc
 
 

@@ -1,5 +1,7 @@
-"""Kernel microbenchmarks: block_spmm (unfused vs fused aggregate+combine)
-and quant_matmul wall-times on this host.
+"""Kernel microbenchmarks: block_spmm (unfused vs fused aggregate+combine),
+the int8 fused-vs-unfused quantized combine A/B, the shape-class autotuner
+sweep (search trajectory + cache warm-start proof), and quant_matmul
+wall-times on this host.
 
 On CPU the Pallas kernels run in *interpret* mode, so these are
 correctness-path timings dominated by per-grid-step dispatch — reported
@@ -20,7 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import bench_json, emit, timed
+from benchmarks.common import bench_json, cache_path, emit, timed
 from repro.core import (
     Graph,
     ReduceOp,
@@ -29,12 +31,16 @@ from repro.core import (
     aggregate_backend,
     clear_planner_log,
     dense_combine,
+    kernel_config_scope,
     partition_graph,
     plan_combine_order,
     planner_decisions,
     to_blocked,
 )
 from repro.kernels import (
+    Autotuner,
+    KernelConfig,
+    ShapeClass,
     aggregate_blocked_kernel,
     fused_block_spmm_padded,
     quantized_matmul_kernel,
@@ -124,6 +130,116 @@ def run_fused_comparison(nv, ne, f_in, f_out, v, n, repeats=2) -> dict:
     }
 
 
+def run_quantized_comparison(nv, ne, f_in, f_out, v, n, repeats=2) -> dict:
+    """int8 combine A/B: fused sign-split epilogue vs the unfused quantized
+    path (aggregate kernel + per-tensor-scale quantized matmul).
+
+    Both run under backend="pallas_fused"; the unfused arm is forced via an
+    explicit kernel-config override (``fused=False``), which is exactly the
+    pre-PR-6 behavior quantized models always fell back to.  The fused arm's
+    deviation from the jnp quantized oracle is the per-row-block activation
+    scale (see fused_block_spmm's tolerance contract) and is reported.
+    """
+    rng = np.random.default_rng(11)
+    g = _make_graph(rng, nv, ne, f_in)
+    pg = partition_graph(g, v=v, n=n)
+    bg = to_blocked(pg)
+    featp = jnp.asarray(pg.pad_features(g.node_feat))
+    w = jnp.asarray(rng.standard_normal((f_in, f_out)).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal((f_out,)).astype(np.float32))
+    shape_tag = f"nv={nv};tiles={pg.stats.nonzero_tiles};f={f_in}->{f_out}"
+
+    with aggregate_backend("jnp"):
+        ref = aggregate_combine_blocked(bg, featp, w, b, reduce=ReduceOp.SUM,
+                                        quantized=True)
+
+    def quant_fused():
+        with aggregate_backend("pallas_fused"):
+            return aggregate_combine_blocked(
+                bg, featp, w, b, reduce=ReduceOp.SUM, quantized=True)
+
+    out_fused, us_fused = _timed_blocked(quant_fused, repeats)
+    emit("kernel/quant_combine_pallas_fused", us_fused, shape_tag)
+
+    unfused_cfg = KernelConfig(fused=False)
+
+    def quant_unfused():
+        with aggregate_backend("pallas_fused"), \
+                kernel_config_scope(lambda site: unfused_cfg):
+            return aggregate_combine_blocked(
+                bg, featp, w, b, reduce=ReduceOp.SUM, quantized=True)
+
+    out_unfused, us_unfused = _timed_blocked(quant_unfused, repeats)
+    speedup = us_unfused / us_fused if us_fused else 0.0
+    emit("kernel/quant_combine_unfused_fallback", us_unfused,
+         f"{shape_tag};fused_speedup={speedup:.2f}")
+
+    return {
+        "shape": {"nv": nv, "ne": ne, "f_in": f_in, "f_out": f_out,
+                  "v": v, "n": n},
+        "us_quant_fused": us_fused,
+        "us_quant_unfused": us_unfused,
+        "fused_vs_unfused_speedup": speedup,
+        "unfused_max_abs_err_vs_oracle": float(
+            jnp.abs(out_unfused - ref).max()),   # exact: same quant scheme
+        "fused_max_abs_diff_vs_oracle": float(
+            jnp.abs(out_fused - ref).max()),     # per-row-block-scale drift
+    }
+
+
+def run_autotune_sweep(smoke: bool = False, repeats: int = 2) -> dict:
+    """Autotuner search over representative shape classes.
+
+    Searches from a cold cache (the CI gate deletes it first; a stale one
+    is re-searched anyway because each run would share the environment
+    stamp only on the same host), records the full search trajectory, and
+    proves two contracts in-band:
+
+      * the tuned config beats or matches the pre-autotune hardcoded
+        default on every class — structural, because the default is always
+        candidate 0 and the winner is the argmin over the same run's
+        timings;
+      * a second tuner warm-started from the persisted cache performs zero
+        searches.
+    """
+    cache_file = cache_path("autotune_cache.json")
+    max_candidates = 2 if smoke else None
+    tuner = Autotuner(cache_file, repeats=repeats,
+                      max_candidates=max_candidates)
+    classes = [
+        ShapeClass(64, 8, 8, 8, 8, 128, 32, "sum", "float32", False),
+        ShapeClass(64, 8, 8, 8, 8, 128, 32, "sum", "float32", True),
+        ShapeClass(64, 8, 8, 8, 8, 128, 32, "max", "float32", False),
+        ShapeClass(128, 16, 16, 8, 8, 256, 64, "sum", "float32", False),
+    ]
+    if smoke:
+        classes = classes[:2]
+    for sc in classes:
+        tuner.ensure(sc)
+    for t in tuner.trajectory:
+        emit("kernel/autotune", t.tuned_us,
+             f"{t.shape_class};default={t.baseline_us:.1f}us;"
+             f"speedup={t.speedup_vs_baseline:.2f}")
+
+    # Warm-start proof: a fresh tuner over the same classes hits the
+    # persisted cache for every one.
+    warm = Autotuner(cache_file, repeats=repeats,
+                     max_candidates=max_candidates)
+    for sc in classes:
+        warm.ensure(sc)
+
+    return {
+        "cache_path": cache_file,
+        "classes": [sc.key() for sc in classes],
+        "max_candidates": max_candidates,
+        "searches": tuner.searches,
+        "warm_searches": warm.searches,   # must be 0 (cache round-trip)
+        "tuned_beats_or_matches_default": all(
+            t.tuned_us <= t.baseline_us for t in tuner.trajectory),
+        "trajectory": [t.to_dict() for t in tuner.trajectory],
+    }
+
+
 def run(quick: bool = True, smoke: bool = False):
     rng = np.random.default_rng(0)
     if smoke:
@@ -154,6 +270,8 @@ def run(quick: bool = True, smoke: bool = False):
     emit("kernel/block_spmm_jnp_ref", us_jnp, "oracle")
 
     fused_doc = run_fused_comparison(*fused_shape, repeats=repeats)
+    quant_doc = run_quantized_comparison(*fused_shape, repeats=repeats)
+    autotune_doc = run_autotune_sweep(smoke=smoke, repeats=repeats)
 
     m, k, n = (64, 128, 64) if smoke else (
         (128, 256, 128) if quick else (512, 1024, 512))
@@ -167,11 +285,12 @@ def run(quick: bool = True, smoke: bool = False):
 
     return bench_json({
         "bench": "kernel_micro",
-        "interpret": True,
         "note": "CPU interpret-mode timings: per-grid-step dispatch "
                 "dominates; fused-vs-unfused compares completed compute "
                 "(block_until_ready) on the same shape",
         "us_block_spmm_interp": us_interp,
         "us_block_spmm_jnp_ref": us_jnp,
         "fused": fused_doc,
+        "quantized": quant_doc,
+        "autotune": autotune_doc,
     })

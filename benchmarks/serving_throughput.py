@@ -19,8 +19,9 @@ Three measurements, folded into one BENCH JSON document:
 
 Emits the usual ``name,us,derived`` CSV lines plus a BENCH_JSON line
 (``{"bench": "serving_throughput", ..., "mixed": {...},
-"fused_vs_unfused": {...}}``) that also persists to BENCH_PR5.json at the
-repo root (see benchmarks.common.bench_json).
+"fused_vs_unfused": {...}}``) that also persists to BENCH.json at the
+repo root, stamped with device kind / jax version / interpret mode (see
+benchmarks.common.bench_json).
 
 Run:  PYTHONPATH=src python benchmarks/serving_throughput.py [--requests N]
 """

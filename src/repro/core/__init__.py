@@ -6,8 +6,10 @@ from repro.core.aggregate import (
     COMBINE_ORDERS,
     BlockedGraph,
     CombinePlan,
+    KernelSite,
     ReduceOp,
     active_aggregate_backend,
+    active_kernel_resolver,
     aggregate_backend,
     aggregate_blocked,
     aggregate_combine_blocked,
@@ -16,6 +18,7 @@ from repro.core.aggregate import (
     blocked_degrees,
     clear_planner_log,
     dense_combine,
+    kernel_config_scope,
     plan_combine_order,
     planner_decisions,
     to_blocked,

@@ -94,6 +94,78 @@ def aggregate_backend(name: str):
         stack.pop()
 
 
+# ---------------------------------------------------------------------------
+# Kernel-config resolution: an optional thread-local hook that lets a tuner
+# (repro.kernels.autotune) or an explicit test override steer *how* each
+# aggregate+combine site lowers — fused vs unfused, execution order, and the
+# kernel tile widths — without the layers knowing anything about it.  Like
+# the backend selection above, the resolver is consulted at trace time, so
+# wrapping a jit'd call site bakes the chosen configs into that trace.
+# ---------------------------------------------------------------------------
+
+
+class KernelSite(NamedTuple):
+    """Static (trace-time) description of one aggregate+combine call site.
+
+    Everything here is a Python constant at trace time — tile geometry,
+    feature widths, reduce mode, dtype, quantization, and the active
+    backend — i.e. exactly the inputs a shape-class autotuner keys on.
+    """
+
+    num_blocks: int
+    num_dst_groups: int
+    num_src_groups: int
+    v: int
+    n: int
+    f_in: int
+    f_out: int
+    reduce: str
+    dtype: str
+    quantized: bool
+    backend: str
+
+
+_RESOLVER_TLS = threading.local()
+
+
+def _resolver_stack() -> list:
+    stack = getattr(_RESOLVER_TLS, "stack", None)
+    if stack is None:
+        stack = _RESOLVER_TLS.stack = [None]
+    return stack
+
+
+def active_kernel_resolver():
+    return _resolver_stack()[-1]
+
+
+@contextlib.contextmanager
+def kernel_config_scope(resolver):
+    """Install a kernel-config resolver for aggregate_combine_blocked.
+
+    ``resolver(site: KernelSite)`` returns a config object or None (None =
+    keep the defaults).  The config is duck-typed; the attributes read are
+
+      * ``fused``   — Optional[bool]: force the fused epilogue kernel on or
+        off (honored only on the ``pallas_fused`` backend, where fusion is
+        the default; ``pallas``/``jnp`` keep their meaning).
+      * ``order``   — Optional[str]: combination order, consulted only when
+        the call site asked for ``"auto"`` (explicit order and the
+        nonlinear-stage pinning always win).
+      * ``block_f`` — Optional[int]: feature tile width of the unfused
+        SpMM kernel.
+      * ``lane``    — Optional[int]: lane padding of the fused kernel.
+
+    Scopes nest and are per-thread, mirroring ``aggregate_backend``.
+    """
+    stack = _resolver_stack()
+    stack.append(resolver)
+    try:
+        yield
+    finally:
+        stack.pop()
+
+
 class BlockedGraph(NamedTuple):
     """Device-resident view of a PartitionedGraph (static shapes).
 
@@ -197,6 +269,7 @@ def aggregate_blocked(
     bg: BlockedGraph,
     feat_padded: jax.Array,
     reduce: ReduceOp = ReduceOp.SUM,
+    block_f: Optional[int] = None,
 ) -> jax.Array:
     """Blocked aggregation over non-zero tiles only.
 
@@ -205,6 +278,8 @@ def aggregate_blocked(
       feat_padded: [G_src * N, F] source features, padded (see
         PartitionedGraph.pad_features).
       reduce: SUM / MEAN / MAX.
+      block_f: feature tile width of the Pallas SpMM kernel (autotuner
+        knob; None = the kernel's 128-lane default, ignored on jnp).
 
     Returns:
       [G_dst * V, F] aggregated features (padded rows included).
@@ -231,7 +306,8 @@ def aggregate_blocked(
         from repro.kernels.ops import block_spmm_padded
 
         out = block_spmm_padded(bg.blocks, bg.block_row, bg.block_col,
-                                feat_padded, bg.num_dst_groups)
+                                feat_padded, bg.num_dst_groups,
+                                block_f=block_f or 128)
         if reduce == ReduceOp.MEAN:
             out = mean_normalize(out)
         return out.astype(feat_padded.dtype)
@@ -310,7 +386,7 @@ def planner_decisions() -> list:
     return [
         {"blocks": k[0], "v": k[1], "n": k[2], "g_dst": k[3], "g_src": k[4],
          "f_in": k[5], "f_out": k[6], "reduce": k[7], "backend": k[8],
-         **plan.to_dict()}
+         "quantized": k[9], **plan.to_dict()}
         for k, plan in _plan_log().items()
     ]
 
@@ -348,9 +424,11 @@ def plan_combine_order(bg: BlockedGraph, f_in: int, f_out: int,
 
 
 def _record_plan(bg: BlockedGraph, f_in: int, f_out: int, reduce: ReduceOp,
-                 backend: str, plan: CombinePlan) -> None:
+                 backend: str, plan: CombinePlan,
+                 quantized: bool = False) -> None:
     key = (int(bg.blocks.shape[0]), bg.v, bg.n, bg.num_dst_groups,
-           bg.num_src_groups, f_in, f_out, str(reduce.value), backend)
+           bg.num_src_groups, f_in, f_out, str(reduce.value), backend,
+           bool(quantized))
     _plan_log()[key] = plan
 
 
@@ -410,36 +488,65 @@ def aggregate_combine_blocked(
     aggregate-first GNN layer — choosing the execution order statically
     (see ``plan_combine_order``) and, on the ``pallas_fused`` backend,
     running the aggregate-first order through the fused Pallas kernel.
+    An installed kernel-config resolver (``kernel_config_scope``; the
+    autotuner's hook) can additionally steer fused-vs-unfused, the auto
+    order decision, and the kernel tile widths per shape class.
 
-    Fallbacks, all numerically anchored to the jnp oracle:
-      * MAX reduce — no SpMM form exists, so aggregate (jnp comparator
-        path) then combine densely.
-      * ``quantized`` — the int8 combine is nonlinear, so fusing/reordering
-        around it would change semantics; aggregate first, then the
-        sign-split MVM, exactly like the pre-fusion layers.
+    Nonlinear stages pin the execution order to aggregate-first (the
+    combine cannot be hoisted through them) but no longer force the slow
+    path:
+      * MAX reduce — lowered onto the fused kernel's comparator mode on
+        ``pallas_fused`` (jnp comparator + dense combine elsewhere).
+      * ``quantized`` — the int8 sign-split MVM runs as the fused kernel's
+        quantized epilogue on ``pallas_fused`` (per-row-block activation
+        scales; see the kernel's documented int8 tolerance vs the
+        per-tensor oracle), and as the unfused
+        ``photonic.quant.quantized_matmul`` elsewhere.
 
     Returns [G_dst * V, F_out].
     """
-    f_in = feat_padded.shape[-1]
-    f_out = w.shape[-1]
-    if reduce == ReduceOp.MAX or quantized:
-        h = aggregate_blocked(bg, feat_padded, reduce)
-        return dense_combine(h, w, bias, activation, quantized)
-
+    f_in = int(feat_padded.shape[-1])
+    f_out = int(w.shape[-1])
     backend = active_aggregate_backend()
+
+    cfg = None
+    resolver = active_kernel_resolver()
+    if resolver is not None:
+        cfg = resolver(KernelSite(
+            num_blocks=int(bg.blocks.shape[0]),
+            num_dst_groups=bg.num_dst_groups,
+            num_src_groups=bg.num_src_groups,
+            v=bg.v, n=bg.n, f_in=f_in, f_out=f_out,
+            reduce=str(reduce.value), dtype=str(feat_padded.dtype),
+            quantized=bool(quantized), backend=backend))
+
+    # MAX and the int8 MVM are nonlinear: the combine cannot move through
+    # them, so the order is pinned regardless of request or tuner choice.
+    pinned = reduce == ReduceOp.MAX or quantized
+    if pinned:
+        order = "aggregate_first"
+    elif order == "auto" and cfg is not None and getattr(
+            cfg, "order", None) in ("aggregate_first", "combine_first"):
+        order = cfg.order
     plan = plan_combine_order(bg, f_in, f_out, order)
-    _record_plan(bg, f_in, f_out, reduce, backend, plan)
+    _record_plan(bg, f_in, f_out, reduce, backend, plan, quantized)
+
+    block_f = getattr(cfg, "block_f", None) if cfg is not None else None
 
     if plan.order == "combine_first":
         # Narrow the SpMM width first; the blocked aggregation then runs on
         # whichever backend is active (incl. the unfused Pallas kernel).
         xw = dense_combine(feat_padded, w)
-        h = aggregate_blocked(bg, xw, reduce)
+        h = aggregate_blocked(bg, xw, reduce, block_f=block_f)
         if bias is not None:
             h = h + bias
         return _apply_activation(h, activation)
 
-    if backend == "pallas_fused":
+    use_fused = backend == "pallas_fused"
+    if use_fused and cfg is not None and getattr(cfg, "fused", None) is not None:
+        use_fused = bool(cfg.fused)
+
+    if use_fused:
         # Lazy import: kernels.ops imports core.partition (cycle guard).
         from repro.kernels.ops import fused_block_spmm_padded
 
@@ -447,15 +554,19 @@ def aggregate_combine_blocked(
         if reduce == ReduceOp.MEAN:
             deg = blocked_degrees(bg).astype(feat_padded.dtype)
             inv_deg = 1.0 / jnp.maximum(deg, 1.0)
+        lane = getattr(cfg, "lane", None) if cfg is not None else None
         out = fused_block_spmm_padded(
             bg.blocks, bg.block_row, bg.block_col, feat_padded, w, bias,
             inv_deg, bg.num_dst_groups,
             activation=activation if activation else "none",
+            reduce="max" if reduce == ReduceOp.MAX else "sum",
+            quantized=bool(quantized),
+            lane=lane or 128,
         )
         return out.astype(feat_padded.dtype)
 
-    h = aggregate_blocked(bg, feat_padded, reduce)
-    return dense_combine(h, w, bias, activation)
+    h = aggregate_blocked(bg, feat_padded, reduce, block_f=block_f)
+    return dense_combine(h, w, bias, activation, quantized)
 
 
 def attention_aggregate_blocked(

@@ -5,9 +5,19 @@
 #                       intermediate never round-trips through HBM
 #   quant_matmul      — int8 sign-split MVM (GHOST combine stage)
 # ops.py holds the jit'd wrappers (interpret=True on CPU); ref.py the oracles.
+# autotune.py searches the fused/unfused config space per shape class and
+# persists winners (serving resolves them at trace-build time).
 from repro.kernels.ops import (
     aggregate_blocked_kernel,
     block_spmm_padded,
     fused_block_spmm_padded,
     quantized_matmul_kernel,
+)
+from repro.kernels.autotune import (
+    Autotuner,
+    AutotuneCache,
+    KernelConfig,
+    ShapeClass,
+    candidate_configs,
+    synthesize_problem,
 )

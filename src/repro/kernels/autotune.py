@@ -1,0 +1,424 @@
+"""Shape-class kernel autotuner for the blocked aggregate+combine stage.
+
+GNNBuilder (arXiv 2303.16459) shows that per-model design-space search over
+tiling/parallelism parameters is what turns a generic GNN-accelerator
+template into a competitive one; the acceleration survey (arXiv 2306.14052)
+frames per-shape kernel specialization as the primary software lever.  This
+module brings both to the jax_pallas reproduction: instead of the one
+hardcoded lowering the fused kernel shipped with (fused epilogue, 128-lane
+padding, FLOP-planner order), every *shape class* gets a measured winner
+from the configuration space
+
+  * fused epilogue kernel vs unfused (block_spmm + dense/quantized combine)
+  * aggregate-first vs combine-first execution order
+  * unfused SpMM feature tile width ``block_f``
+  * fused-kernel lane padding ``lane``
+
+A shape class is a coarse key over the trace-static call-site description
+(``core.aggregate.KernelSite``): tile counts and group counts rounded up to
+powers of two — the *same* rounding the serving bucketer applies
+(``serving.bucketing.next_pow2``), so one tuned class covers exactly the
+sites one ``(model, bucket)`` executor trace produces — plus the raw
+``(v, n)`` group geometry, pow2-bucketed feature widths, reduce mode,
+dtype, and quantization.
+
+Candidates are timed end-to-end through the public
+``aggregate_combine_blocked`` entry (a jit per candidate, warmed up, then
+``block_until_ready``-timed), so the numbers include exactly the lowering
+serving executes — and the baseline candidate is always the pre-autotune
+hardcoded behavior, so a tuned class can never regress it within one
+search's timing.
+
+Winners live in an in-process table and persist to a JSON cache stamped
+with the jax version and device kind (``jax.devices()[0]``).  A cache
+written by a different jax or device is *stale* — kernel timings do not
+transfer — and is discarded wholesale on load, triggering a fresh search
+(the same trust model the executor pool applies to its traces: winners are
+per-environment, keyed per shape class).  Serving warm-starts by pointing
+the tuner at the persisted cache: the executor pool resolves configs at
+trace-build time (see ``serving.registry.ExecutorPool``), so a warm cache
+means zero searches on the serving path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregate import (
+    BlockedGraph,
+    KernelSite,
+    ReduceOp,
+    aggregate_backend,
+    aggregate_combine_blocked,
+    kernel_config_scope,
+    with_degrees,
+)
+
+CACHE_VERSION = 1
+
+# Tunable tile widths: lane multiples of the fp32 (8, 128) TPU tile.
+LANE_CANDIDATES = (128, 256)
+
+
+def _next_pow2(x: int) -> int:
+    """Smallest power of two >= x — mirrors serving.bucketing.next_pow2 so
+    shape classes and serving buckets round identically (kept local to
+    avoid importing the serving package from the kernel layer)."""
+    if x <= 1:
+        return 1
+    return 1 << (int(x) - 1).bit_length()
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelConfig:
+    """One point in the kernel configuration space.
+
+    ``None`` fields keep the call site's default behavior (planner order,
+    backend-default fusion, 128-lane tiles) — the duck-typed contract
+    ``core.aggregate.kernel_config_scope`` documents.
+    """
+
+    fused: Optional[bool] = None
+    order: Optional[str] = None       # "aggregate_first" | "combine_first"
+    block_f: Optional[int] = None     # unfused SpMM feature tile width
+    lane: Optional[int] = None        # fused kernel lane padding
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "KernelConfig":
+        fields = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in fields})
+
+
+# The pre-autotune hardcoded behaviors (PR 5): fused 128-lane epilogue for
+# linear stages; unfused fallback for MAX and quantized combines.
+def baseline_config(shape_class: "ShapeClass") -> KernelConfig:
+    pinned = shape_class.reduce == "max" or shape_class.quantized
+    if pinned:
+        return KernelConfig(fused=False, order="aggregate_first",
+                            block_f=128, lane=128)
+    return KernelConfig(fused=True, order="aggregate_first",
+                        block_f=128, lane=128)
+
+
+class ShapeClass(NamedTuple):
+    """Coarse shape key: pow2-bucketed geometry + reduce/dtype/quant mode."""
+
+    num_blocks: int       # pow2
+    num_dst_groups: int   # pow2
+    num_src_groups: int   # pow2
+    v: int
+    n: int
+    f_in: int             # pow2
+    f_out: int            # pow2
+    reduce: str
+    dtype: str
+    quantized: bool
+
+    @classmethod
+    def from_site(cls, site: KernelSite) -> "ShapeClass":
+        return cls(
+            num_blocks=_next_pow2(site.num_blocks),
+            num_dst_groups=_next_pow2(site.num_dst_groups),
+            num_src_groups=_next_pow2(site.num_src_groups),
+            v=site.v,
+            n=site.n,
+            f_in=_next_pow2(site.f_in),
+            f_out=_next_pow2(site.f_out),
+            reduce=site.reduce,
+            dtype=site.dtype,
+            quantized=bool(site.quantized),
+        )
+
+    def key(self) -> str:
+        """Stable string key for the persisted cache (executor-trace style:
+        one entry per shape class, environment stamped at the cache level)."""
+        q = "q8" if self.quantized else "fp"
+        return (f"B{self.num_blocks}.D{self.num_dst_groups}"
+                f".S{self.num_src_groups}.v{self.v}.n{self.n}"
+                f".fi{self.f_in}.fo{self.f_out}.{self.reduce}"
+                f".{self.dtype}.{q}")
+
+
+def candidate_configs(shape_class: ShapeClass,
+                      max_candidates: Optional[int] = None
+                      ) -> list[KernelConfig]:
+    """The search space for one shape class, baseline first.
+
+    Ordering matters twice: the first entry is always the pre-autotune
+    hardcoded behavior (so the trajectory records a default-vs-tuned
+    comparison), and ``max_candidates`` (the CI smoke budget) truncates
+    from the *back*, keeping the baseline and the primary alternative.
+    """
+    pinned = shape_class.reduce == "max" or shape_class.quantized
+    cands = [baseline_config(shape_class)]
+    # The primary alternative: flip fused <-> unfused.
+    cands.append(dataclasses.replace(cands[0], fused=not cands[0].fused))
+    # Wider tiles only when a feature dim actually exceeds one lane tile —
+    # otherwise they are pure extra padding.
+    if max(shape_class.f_in, shape_class.f_out) > 128:
+        cands.append(KernelConfig(fused=True, order="aggregate_first",
+                                  block_f=128, lane=256))
+    if shape_class.f_in > 128:
+        cands.append(KernelConfig(fused=False, order="aggregate_first",
+                                  block_f=256, lane=128))
+    if not pinned:
+        # Order is only searchable for linear stages (MAX / int8 pin it).
+        cands.append(KernelConfig(fused=False, order="combine_first",
+                                  block_f=128, lane=128))
+        if shape_class.f_out > 128:
+            cands.append(KernelConfig(fused=False, order="combine_first",
+                                      block_f=256, lane=128))
+    if max_candidates is not None:
+        cands = cands[:max(1, int(max_candidates))]
+    return cands
+
+
+def synthesize_problem(shape_class: ShapeClass, seed: int = 0,
+                       tile_density: float = 0.25):
+    """A representative problem instance at the class's padded geometry.
+
+    Tiles are CSR-row-sorted (the kernel contract) with random columns and
+    Bernoulli entries; features/weights are standard normal.  Structure is
+    synthetic but shape-exact, which is what kernel timing keys on.
+    """
+    rng = np.random.default_rng(seed)
+    b = shape_class.num_blocks
+    gd, gs = shape_class.num_dst_groups, shape_class.num_src_groups
+    v, n = shape_class.v, shape_class.n
+    row = np.sort(rng.integers(0, gd, b)).astype(np.int32)
+    col = rng.integers(0, gs, b).astype(np.int32)
+    vals = (rng.random((b, v, n)) < tile_density).astype(np.float32)
+    bg = with_degrees(BlockedGraph(
+        blocks=jnp.asarray(vals),
+        block_row=jnp.asarray(row),
+        block_col=jnp.asarray(col),
+        num_dst_groups=gd,
+        num_src_groups=gs,
+        v=v, n=n, num_nodes=gd * v,
+    ))
+    featp = jnp.asarray(
+        rng.standard_normal((gs * n, shape_class.f_in)).astype(np.float32))
+    w = jnp.asarray(
+        rng.standard_normal(
+            (shape_class.f_in, shape_class.f_out)).astype(np.float32))
+    bias = jnp.asarray(
+        rng.standard_normal((shape_class.f_out,)).astype(np.float32))
+    return bg, featp, w, bias
+
+
+def _environment() -> dict:
+    dev = jax.devices()[0]
+    return {
+        "cache_version": CACHE_VERSION,
+        "jax_version": jax.__version__,
+        "device_kind": f"{dev.platform}:{dev.device_kind}",
+    }
+
+
+@dataclasses.dataclass
+class AutotuneCache:
+    """JSON-persisted winners, keyed by shape-class string.
+
+    The environment stamp (jax version + device kind) gates the whole
+    cache: winners measured on another device or jax build are stale and
+    discarded on load, forcing a re-search — never silently reused.
+    """
+
+    path: Optional[str] = None
+    entries: dict = dataclasses.field(default_factory=dict)
+    meta: dict = dataclasses.field(default_factory=_environment)
+    stale_discarded: bool = False
+
+    @classmethod
+    def load(cls, path: Optional[str]) -> "AutotuneCache":
+        if path is None:
+            return cls()
+        try:
+            with open(path) as f:
+                raw = json.load(f)
+        except (FileNotFoundError, json.JSONDecodeError):
+            return cls(path=path)
+        env = _environment()
+        if not isinstance(raw, dict) or any(
+                raw.get(k) != env[k] for k in env):
+            return cls(path=path, stale_discarded=True)
+        entries = {
+            key: KernelConfig.from_dict(cfg)
+            for key, cfg in raw.get("entries", {}).items()
+            if isinstance(cfg, dict)
+        }
+        return cls(path=path, entries=entries)
+
+    def validate(self) -> "AutotuneCache":
+        """Fail-fast schema check (the CI smoke gate)."""
+        for key, cfg in self.entries.items():
+            if not isinstance(key, str) or not isinstance(cfg, KernelConfig):
+                raise ValueError(f"malformed autotune cache entry {key!r}")
+            if cfg.fused is None:
+                raise ValueError(
+                    f"cache entry {key!r} has no fused decision")
+        for field in ("jax_version", "device_kind"):
+            if not self.meta.get(field):
+                raise ValueError(f"autotune cache meta missing {field}")
+        return self
+
+    def lookup(self, shape_class: ShapeClass) -> Optional[KernelConfig]:
+        return self.entries.get(shape_class.key())
+
+    def store(self, shape_class: ShapeClass, config: KernelConfig) -> None:
+        self.entries[shape_class.key()] = config
+        self.save()
+
+    def save(self) -> None:
+        if self.path is None:
+            return
+        doc = dict(self.meta)
+        doc["entries"] = {
+            key: self.entries[key].to_dict()
+            for key in sorted(self.entries)
+        }
+        parent = os.path.dirname(os.path.abspath(self.path))
+        os.makedirs(parent, exist_ok=True)
+        tmp = self.path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+            f.write("\n")
+        os.replace(tmp, self.path)
+
+
+@dataclasses.dataclass
+class TuneResult:
+    """One search's full trajectory (benchmark/ledger fodder)."""
+
+    shape_class: str
+    candidates: list          # [{"config": {...}, "us": float}] in search order
+    chosen: dict              # winning config
+    baseline_us: float        # the pre-autotune hardcoded behavior's time
+    tuned_us: float
+
+    @property
+    def speedup_vs_baseline(self) -> float:
+        return self.baseline_us / self.tuned_us if self.tuned_us else 0.0
+
+    def to_dict(self) -> dict:
+        return {**dataclasses.asdict(self),
+                "speedup_vs_baseline": self.speedup_vs_baseline}
+
+
+class Autotuner:
+    """Search + cache + resolver for per-shape-class kernel configs.
+
+    ``resolve`` is the ``kernel_config_scope`` hook: map the call site to
+    its shape class, return the cached winner, and (when ``tune_on_miss``)
+    run the search for classes never seen.  The executor pool calls
+    ``resolve`` for every site of a trace *before* building it (an
+    abstract ``eval_shape`` pre-pass records the sites), so searches run
+    as plain host-side timing, never inside a jit trace.
+    """
+
+    def __init__(
+        self,
+        cache_path: Optional[str] = None,
+        *,
+        repeats: int = 3,
+        max_candidates: Optional[int] = None,
+        tune_on_miss: bool = True,
+        seed: int = 0,
+    ):
+        if repeats < 1:
+            raise ValueError("repeats must be >= 1")
+        self.cache = AutotuneCache.load(cache_path)
+        self.repeats = repeats
+        self.max_candidates = max_candidates
+        self.tune_on_miss = tune_on_miss
+        self.seed = seed
+        self.searches = 0                       # searches actually run
+        self.trajectory: list[TuneResult] = []  # one entry per search
+        self._resolved: dict[str, KernelConfig] = {}  # live (looked-up) configs
+
+    # -- resolver hook ---------------------------------------------------
+
+    def resolve(self, site: KernelSite) -> Optional[KernelConfig]:
+        shape_class = ShapeClass.from_site(site)
+        config = self.ensure(shape_class)
+        if config is not None:
+            self._resolved[shape_class.key()] = config
+        return config
+
+    def scope(self):
+        """Context manager installing this tuner as the active resolver."""
+        return kernel_config_scope(self.resolve)
+
+    def live_configs(self) -> dict:
+        """Shape-class -> config for every class resolved so far (what the
+        serve report surfaces as the live kernel configuration set)."""
+        return {key: cfg.to_dict()
+                for key, cfg in sorted(self._resolved.items())}
+
+    # -- search ----------------------------------------------------------
+
+    def ensure(self, shape_class: ShapeClass) -> Optional[KernelConfig]:
+        """Cached winner, searching on miss (None only with search off)."""
+        config = self.cache.lookup(shape_class)
+        if config is None and self.tune_on_miss:
+            config = self.tune(shape_class)
+        return config
+
+    def tune(self, shape_class: ShapeClass) -> KernelConfig:
+        """Run the timed search for one shape class and cache the winner."""
+        self.searches += 1
+        problem = synthesize_problem(shape_class, seed=self.seed)
+        candidates = candidate_configs(shape_class, self.max_candidates)
+        timed = [(cfg, self._time_candidate(shape_class, cfg, problem))
+                 for cfg in candidates]
+        best_cfg, best_us = min(timed, key=lambda t: t[1])
+        self.trajectory.append(TuneResult(
+            shape_class=shape_class.key(),
+            candidates=[{"config": cfg.to_dict(), "us": us}
+                        for cfg, us in timed],
+            chosen=best_cfg.to_dict(),
+            baseline_us=timed[0][1],   # candidate 0 is always the baseline
+            tuned_us=best_us,
+        ))
+        self.cache.store(shape_class, best_cfg)
+        return best_cfg
+
+    def _time_candidate(self, shape_class: ShapeClass, config: KernelConfig,
+                        problem) -> float:
+        """Wall time (us) of one jitted aggregate+combine under ``config``.
+
+        Timed through ``block_until_ready`` (completed compute, not async
+        dispatch), min over ``repeats`` after a compile warm-up — the same
+        discipline as benchmarks/kernel_micro.
+        """
+        bg, featp, w, bias = problem
+        reduce = ReduceOp(shape_class.reduce)
+        quantized = shape_class.quantized
+
+        @jax.jit
+        def fn(featp, w, bias):
+            # Both context managers are trace-time selections: the config
+            # and backend bake into this candidate's compiled program.
+            with aggregate_backend("pallas_fused"), \
+                    kernel_config_scope(lambda site: config):
+                return aggregate_combine_blocked(
+                    bg, featp, w, bias, reduce=reduce, quantized=quantized)
+
+        jax.block_until_ready(fn(featp, w, bias))  # compile outside timing
+        best = float("inf")
+        for _ in range(self.repeats):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(featp, w, bias))
+            best = min(best, time.perf_counter() - t0)
+        return best * 1e6

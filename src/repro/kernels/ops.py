@@ -69,18 +69,21 @@ def block_spmm_padded(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("num_dst_groups", "activation", "lane", "interpret"),
+    static_argnames=("num_dst_groups", "activation", "reduce", "quantized",
+                     "lane", "interpret"),
 )
 def fused_block_spmm_padded(
     blocks: jax.Array,          # [B, V, N] CSR-row-sorted tiles
     block_row: jax.Array,       # [B] int32, non-decreasing
     block_col: jax.Array,       # [B] int32
     feat: jax.Array,            # [G_src * N, F_in]
-    w: jax.Array,               # [F_in, F_out]
+    w: jax.Array,               # [F_in, F_out] float weights
     bias: jax.Array | None,     # [F_out] or None
     inv_deg: jax.Array | None,  # [G_dst * V] inverse degrees (MEAN) or None
     num_dst_groups: int,
     activation: str = "none",
+    reduce: str = "sum",
+    quantized: bool = False,
     lane: int = 128,
     interpret: bool | None = None,
 ) -> jax.Array:
@@ -90,14 +93,16 @@ def fused_block_spmm_padded(
     weight rows contribute nothing; padded output columns are sliced off),
     runs the fused kernel, and rewrites never-visited destination groups to
     ``act(bias)`` — the value the unfused oracle assigns to an all-zero
-    aggregation row.  Returns [G_dst * V, F_out].
+    aggregation row.  ``quantized`` quantizes the float weights here
+    (per-output-channel, identical to ``photonic.quant.quantize_weights``)
+    and selects the int8 sign-split combine epilogue; see the kernel
+    docstring for its documented tolerance vs the per-tensor-scale oracle.
+    Returns [G_dst * V, F_out].
     """
     interpret = auto_interpret() if interpret is None else interpret
     f_in, f_out = w.shape
     v = blocks.shape[1]
     featp = _pad_to(feat, 1, lane)
-    wp = _pad_to(_pad_to(w, 0, lane), 1, lane)
-    fout_p = wp.shape[1]
     bias_row = (jnp.zeros((f_out,), feat.dtype) if bias is None
                 else bias.astype(feat.dtype))
     biasp = _pad_to(bias_row.reshape(1, f_out), 1, lane)
@@ -105,14 +110,26 @@ def fused_block_spmm_padded(
     invd = (jnp.ones((num_dst_groups * v, 1), feat.dtype) if not apply_deg
             else inv_deg.reshape(num_dst_groups * v, 1).astype(feat.dtype))
 
+    w_scale = None
+    if quantized:
+        # Weight quantization matches the unfused oracle exactly (shared
+        # scheme); zero-padded int8 rows/columns stay exact no-ops, and
+        # padded output channels get scale 0 (sliced off below).
+        wq, sw = quantize_weights(w, QuantConfig())
+        wp = _pad_to(_pad_to(wq, 0, lane), 1, lane)
+        w_scale = _pad_to(sw.reshape(1, f_out).astype(jnp.float32), 1, lane)
+    else:
+        wp = _pad_to(_pad_to(w, 0, lane), 1, lane)
+
     out = fused_block_spmm(
         blocks, block_row, block_col, featp, wp, biasp, invd,
         num_dst_groups, activation=activation, apply_deg=apply_deg,
-        interpret=interpret,
+        reduce=reduce, w_scale=w_scale, interpret=interpret,
     )[:, :f_out]
     # Destination groups with no tiles are never visited by the kernel, so
     # their output blocks are uninitialized; the oracle maps their all-zero
-    # aggregation rows through the epilogue, i.e. to act(bias).
+    # aggregation rows through the epilogue, i.e. to act(bias) (a zero row
+    # quantizes to zeros, so this holds for the int8 epilogue too).
     visited = jnp.zeros((num_dst_groups,), jnp.bool_).at[block_row].set(True)
     fill = apply_epilogue_activation(bias_row.astype(jnp.float32),
                                      activation).astype(out.dtype)

@@ -117,6 +117,13 @@ class GnnServeEngine:
       admission_policy: "reject" (turn the new request away) or
         "shed-oldest" (drop the stalest waiting request to make room).
       cache_capacity: LRU capacity of the preprocessing cache.
+      tuner: optional ``kernels.autotune.Autotuner`` (duck-typed: needs
+        ``resolve(site)`` + ``live_configs()``); the executor pool resolves
+        per-shape-class kernel configs through it at trace-build time,
+        warm-started from its persisted cache.
+      kernel_config: optional explicit ``KernelConfig``-like object applied
+        to every kernel site — a deterministic override that beats the
+        tuner (what tests pin).
     """
 
     def __init__(
@@ -130,13 +137,16 @@ class GnnServeEngine:
         max_waiting: Optional[int] = None,
         admission_policy: str = "reject",
         cache_capacity: int = 256,
+        tuner=None,
+        kernel_config=None,
     ):
         self.cfg = cfg.validate()
         self.flags = flags.validate()
         self.slots = slots
         self.backend = backend
         self.registry = ModelRegistry()
-        self.pool = ExecutorPool(slots=slots, backend=backend)  # validates
+        self.pool = ExecutorPool(slots=slots, backend=backend,  # validates
+                                 tuner=tuner, kernel_config=kernel_config)
         self.scheduler = make_scheduler(scheduler)
         self.admission = AdmissionController(max_waiting, admission_policy)
         self.cache = PreprocessCache(cache_capacity)
@@ -393,7 +403,8 @@ class GnnServeEngine:
                             scheduler=self.scheduler.name,
                             admission_stats=self.admission.stats,
                             queue_max_wait_ticks=max(
-                                waiting_wait, self._max_dropped_wait_ticks))
+                                waiting_wait, self._max_dropped_wait_ticks),
+                            kernel_configs=self.pool.kernel_configs())
 
     def reset_metrics(self) -> None:
         """Zero serving metrics while keeping compiled executors and cache

@@ -28,11 +28,13 @@ from collections import OrderedDict
 from typing import Callable, Iterator, Optional
 
 import jax
+import jax.numpy as jnp
 
 from repro.core.aggregate import (
     AGGREGATE_BACKENDS,
     BlockedGraph,
     aggregate_backend,
+    kernel_config_scope,
     with_degrees,
 )
 from repro.serving.bucketing import Bucket
@@ -136,9 +138,22 @@ class ExecutorPool:
     pool builds: "jnp" (oracle), "pallas" (unfused block_spmm), or
     "pallas_fused" (fused aggregate+combine epilogue kernel; the layer-level
     order planner then decides aggregate-first vs combine-first per layer).
+
+    Per-site kernel configs resolve at trace-build time, in precedence
+    order: ``kernel_config`` (one explicit config applied to every site —
+    the deterministic override tests pin) beats ``tuner`` (a duck-typed
+    ``kernels.autotune.Autotuner``-like object with ``resolve(site)``)
+    beats the hardcoded defaults.  With a tuner, ``_build`` first runs the
+    forward *abstractly* (``jax.eval_shape``) under a recording resolver to
+    enumerate the trace's kernel sites — they are all-static Python values,
+    so no compute runs — then tunes each off-trace (plain host timing,
+    warm-started from the tuner's persisted cache), and only then builds
+    the real jit with a lookup resolver.  Timing never happens inside a
+    trace, and a warm cache makes the pre-pass pure lookup.
     """
 
-    def __init__(self, slots: int, backend: str):
+    def __init__(self, slots: int, backend: str, *,
+                 tuner=None, kernel_config=None):
         if slots < 1:
             raise ValueError("slots must be >= 1")
         if backend not in AGGREGATE_BACKENDS:
@@ -146,8 +161,20 @@ class ExecutorPool:
                              f"{AGGREGATE_BACKENDS}")
         self.slots = slots
         self.backend = backend
+        self.tuner = tuner
+        self.kernel_config = kernel_config
         self._executors: dict[tuple[str, Bucket], Callable] = {}
         self._trace_count = 0
+
+    def kernel_configs(self) -> dict:
+        """Shape-class -> config resolved so far (report surface)."""
+        if self.kernel_config is not None:
+            cfg = self.kernel_config
+            to_dict = getattr(cfg, "to_dict", None)
+            return {"*": to_dict() if to_dict else dict(vars(cfg))}
+        if self.tuner is not None:
+            return self.tuner.live_configs()
+        return {}
 
     @property
     def trace_count(self) -> int:
@@ -175,27 +202,64 @@ class ExecutorPool:
         # pooling at the bucket shape would break bit-exactness).
         num_nodes = min(bucket.padded_dst, bucket.padded_src)
 
-        def fwd(params, blocks, row, col, feat):
-            self._trace_count += 1  # runs at trace time only
-            feat = feat[:, :f_in]   # strip feature-dim bucket padding
-            bg = BlockedGraph(
-                blocks=blocks, block_row=row, block_col=col,
-                num_dst_groups=bucket.num_dst_groups,
-                num_src_groups=bucket.num_src_groups,
-                v=bucket.v, n=bucket.n, num_nodes=num_nodes,
-            )
-            # Degrees are structure-static: reduce them once per forward so
-            # every MEAN layer in the model shares the result (XLA drops the
-            # reduction entirely for models that never read it).
-            bg = with_degrees(bg)
-            # The backend selection (jnp oracle / unfused Pallas kernel /
-            # fused aggregate+combine kernel) is read at trace time, so it
-            # bakes into this executor's compiled program.
-            with aggregate_backend(backend):
-                if task == "graph":
-                    return model.node_embed_blocked(params, bg, feat,
-                                                    quantized)
-                return model.apply_blocked(params, bg, feat, quantized)
+        def make_fwd(resolver, count_trace):
+            def fwd(params, blocks, row, col, feat):
+                if count_trace:
+                    self._trace_count += 1  # runs at trace time only
+                feat = feat[:, :f_in]   # strip feature-dim bucket padding
+                bg = BlockedGraph(
+                    blocks=blocks, block_row=row, block_col=col,
+                    num_dst_groups=bucket.num_dst_groups,
+                    num_src_groups=bucket.num_src_groups,
+                    v=bucket.v, n=bucket.n, num_nodes=num_nodes,
+                )
+                # Degrees are structure-static: reduce them once per forward
+                # so every MEAN layer in the model shares the result (XLA
+                # drops the reduction entirely for models that never read it).
+                bg = with_degrees(bg)
+                # Backend and kernel-config selections are read at trace
+                # time, so they bake into this executor's compiled program.
+                with aggregate_backend(backend), kernel_config_scope(resolver):
+                    if task == "graph":
+                        return model.node_embed_blocked(params, bg, feat,
+                                                        quantized)
+                    return model.apply_blocked(params, bg, feat, quantized)
+            return fwd
 
-        batched = jax.vmap(fwd, in_axes=(None, 0, 0, 0, 0))
+        resolver = self._resolve_sites(entry, bucket, make_fwd)
+        batched = jax.vmap(make_fwd(resolver, count_trace=True),
+                           in_axes=(None, 0, 0, 0, 0))
         return jax.jit(batched)
+
+    def _resolve_sites(self, entry: ModelEntry, bucket: Bucket, make_fwd):
+        """The trace's kernel-config resolver (None = hardcoded defaults)."""
+        if self.kernel_config is not None:
+            cfg = self.kernel_config
+            return lambda site: cfg
+        if self.tuner is None:
+            return None
+        # Enumerate kernel sites abstractly: eval_shape runs the forward on
+        # shape/dtype structs only, so the recording resolver sees every
+        # site this trace will hit without executing (or timing) anything.
+        # The recording fwd does NOT count as a trace — only the real build
+        # below does.
+        sites: list = []
+
+        def record(site):
+            if site not in sites:
+                sites.append(site)
+            return None
+
+        struct = jax.ShapeDtypeStruct
+        jax.eval_shape(
+            make_fwd(record, count_trace=False),
+            entry.params,
+            struct((bucket.num_blocks, bucket.v, bucket.n), jnp.float32),
+            struct((bucket.num_blocks,), jnp.int32),
+            struct((bucket.num_blocks,), jnp.int32),
+            struct((bucket.padded_src, bucket.f), jnp.float32),
+        )
+        # Tune (or cache-lookup) each site off-trace, then hand the real
+        # trace a pure-lookup resolver over the frozen results.
+        resolved = {site: self.tuner.resolve(site) for site in sites}
+        return lambda site: resolved.get(site)

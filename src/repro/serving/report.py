@@ -68,6 +68,9 @@ class ServeReport:
     hw_energy_j: float
     hw_req_per_s: float
     hw_avg_power_w: float
+    kernel_configs: dict = dataclasses.field(default_factory=dict)
+                             # shape-class key -> live kernel config
+                             # ({} = hardcoded defaults, no tuner/override)
 
     def to_json(self) -> str:
         return json.dumps(dataclasses.asdict(self), indent=2, default=float)
@@ -88,7 +91,9 @@ class ServeReport:
             f"{self.cache_misses} misses (hit rate {self.cache_hit_rate:.2f})\n"
             f"  jit traces compiled: {self.traces_compiled} "
             f"across buckets {self.buckets}\n"
-            f"  GHOST hardware estimate: {self.hw_latency_s * 1e6:.1f} us, "
+            + (f"  kernel configs: {self.kernel_configs}\n"
+               if self.kernel_configs else "")
+            + f"  GHOST hardware estimate: {self.hw_latency_s * 1e6:.1f} us, "
             f"{self.hw_energy_j * 1e3:.3f} mJ, {self.hw_req_per_s:.0f} req/s, "
             f"avg power {self.hw_avg_power_w:.1f} W"
         )
@@ -103,6 +108,7 @@ def build_report(
     scheduler: str = "fifo",
     admission_stats=None,
     queue_max_wait_ticks: int = 0,
+    kernel_configs: Optional[dict] = None,
 ) -> ServeReport:
     lats = [r.latency_s for r in records]
     buckets: dict[str, int] = {}
@@ -139,4 +145,5 @@ def build_report(
         hw_energy_j=hw_e,
         hw_req_per_s=len(records) / hw_lat if hw_lat > 0 else 0.0,
         hw_avg_power_w=hw_e / hw_lat if hw_lat > 0 else 0.0,
+        kernel_configs=kernel_configs or {},
     )

@@ -1,10 +1,12 @@
 """Fused aggregate+combine kernel + combination-order planner tests.
 
-Covers the PR-5 contract: the fused Pallas kernel (interpret mode on CPU)
-against the unfused jnp oracle across reduce ops and padding shapes,
-combine-first vs aggregate-first numerical equivalence, clean MAX/quantized
-fallbacks, zero-edge graphs, degree hoisting, thread-local backend
-selection, and the four GNN layer types end-to-end.
+Covers the fused-kernel contract: the fused Pallas kernel (interpret mode
+on CPU) against the unfused jnp oracle across reduce ops and padding
+shapes, combine-first vs aggregate-first numerical equivalence, in-kernel
+MAX reduce, the int8 sign-split combine epilogue (within its documented
+per-row-block-scale tolerance; exact when forced unfused), zero-edge
+graphs, degree hoisting, thread-local backend selection, and the four GNN
+layer types end-to-end.
 """
 
 import threading
@@ -138,9 +140,10 @@ def test_fused_zero_edge_graph(reduce):
                                atol=1e-6)
 
 
-def test_max_reduce_falls_back_cleanly():
-    """MAX has no SpMM form: the fused backend must produce the comparator
-    path's numbers, not crash or silently mis-lower."""
+def test_max_reduce_runs_fused_and_matches_oracle():
+    """MAX now lowers inside the fused kernel (-inf-seeded accumulator,
+    maximum merge, masked against structural zeros): the comparator path
+    is exact arithmetic, so fused MAX must equal the oracle exactly."""
     _, _, bg, featp, w, b = _setup(6, 45, 180, 10, 6)
     ref = _oracle(bg, featp, w, b, ReduceOp.MAX)
     with aggregate_backend("pallas_fused"):
@@ -148,13 +151,61 @@ def test_max_reduce_falls_back_cleanly():
     np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=1e-6)
 
 
-def test_quantized_falls_back_to_unfused_path():
-    """The int8 sign-split combine is nonlinear; fused/ reordered execution
-    must not change served quantized numerics."""
+def _int8_epilogue_bound(bg, featp, w):
+    """The fused kernel's documented int8 activation-rounding bound.
+
+    Fused and unfused quantize the *weights* identically, so the only
+    divergence is the activation scale: per destination row-block (the
+    in-kernel reality) vs per-tensor (the oracle).  Each path's rounding
+    error on activations is at most scale/2 per element, so
+    ``|fused - oracle|[i, j] <= 0.5 * (s_blk(i) + s_tensor) * sum_k
+    |W_deq[k, j]|`` — see fused_block_spmm's docstring.
+    """
+    from repro.photonic.quant import QuantConfig, quantize_weights
+
+    h = np.asarray(aggregate_blocked(bg, featp, ReduceOp.SUM))
+    s_tensor = max(np.abs(h).max(), 1e-12) / 127.0
+    groups = h.reshape(bg.num_dst_groups, bg.v, h.shape[1])
+    s_blk = np.maximum(np.abs(groups).max(axis=(1, 2)), 1e-12) / 127.0
+    wq, sw = quantize_weights(w, QuantConfig())
+    w_deq_colsum = np.abs(np.asarray(wq, np.float32)
+                          * np.asarray(sw)).sum(axis=0)   # [F_out]
+    s_rows = np.repeat(s_blk, bg.v) + s_tensor             # [G_dst * V]
+    return 0.5 * s_rows[:, None] * w_deq_colsum[None, :]
+
+
+def test_quantized_fused_epilogue_within_documented_tolerance():
+    """quantized=True no longer forces the unfused fallback: the fused int8
+    sign-split epilogue must agree with the per-tensor-scale oracle within
+    the analytic per-row-block-scale bound (and the plan must be pinned to
+    aggregate-first — int8 quantization is nonlinear)."""
     _, _, bg, featp, w, b = _setup(7, 45, 180, 12, 8)
     ref = dense_combine(aggregate_blocked(bg, featp, ReduceOp.SUM), w, b,
                         quantized=True)
+    clear_planner_log()
     with aggregate_backend("pallas_fused"):
+        got = aggregate_combine_blocked(bg, featp, w, b,
+                                        reduce=ReduceOp.SUM, quantized=True)
+    bound = _int8_epilogue_bound(bg, featp, w)
+    diff = np.abs(np.asarray(got) - np.asarray(ref))
+    assert np.all(diff <= bound + 1e-5), float((diff - bound).max())
+    (decision,) = planner_decisions()
+    assert decision["quantized"] is True
+    assert decision["order"] == "aggregate_first"
+
+
+def test_quantized_forced_unfused_matches_oracle_exactly():
+    """The explicit kernel-config override (fused=False) restores the
+    pre-fusion quantized lowering bit-for-bit — the deterministic escape
+    hatch tests and serving can pin."""
+    from repro.core import kernel_config_scope
+    from repro.kernels import KernelConfig
+
+    _, _, bg, featp, w, b = _setup(7, 45, 180, 12, 8)
+    ref = dense_combine(aggregate_blocked(bg, featp, ReduceOp.SUM), w, b,
+                        quantized=True)
+    with aggregate_backend("pallas_fused"), \
+            kernel_config_scope(lambda site: KernelConfig(fused=False)):
         got = aggregate_combine_blocked(bg, featp, w, b,
                                         reduce=ReduceOp.SUM, quantized=True)
     np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=1e-6)

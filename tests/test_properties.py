@@ -3,7 +3,9 @@
 The core equivalence the whole GHOST dataflow rests on: the blocked V x N
 aggregation must match the edge-list oracle for *any* multigraph — duplicate
 edges, isolated vertices, self loops, and node counts that don't divide the
-group sizes — across all three reduce modes.
+group sizes — across all three reduce modes.  The fused kernel's int8
+sign-split combine epilogue additionally must stay within its *documented*
+tolerance of the per-tensor-scale quantized oracle on the same graph space.
 """
 
 import pytest
@@ -17,8 +19,11 @@ from hypothesis import given, settings, strategies as st
 from repro.core import (
     Graph,
     ReduceOp,
+    aggregate_backend,
     aggregate_blocked,
+    aggregate_combine_blocked,
     aggregate_edges,
+    dense_combine,
     partition_graph,
     to_blocked,
 )
@@ -71,6 +76,58 @@ def test_blocked_padding_rows_are_benign(g, v, n):
     featp = jnp.asarray(pg.pad_features(g.node_feat))
     out = np.asarray(aggregate_blocked(bg, featp, ReduceOp.SUM))
     np.testing.assert_array_equal(out[g.num_nodes:], 0.0)
+
+
+@settings(deadline=None, max_examples=20)
+@given(
+    multigraphs(),
+    st.integers(1, 13),       # v: odd group sizes exercise lane padding
+    st.integers(1, 13),       # n
+    st.integers(1, 9),        # f_out
+    st.integers(0, 2**31 - 1),
+)
+def test_int8_fused_epilogue_within_documented_bound(g, v, n, f_out, wseed):
+    """The fused int8 combine epilogue vs the unfused per-tensor-scale
+    oracle, across arbitrary multigraphs (including zero-edge graphs, whose
+    unvisited rows must come out as exact bias rows in both paths).
+
+    Weight quantization is byte-identical in both paths, so the only
+    divergence is activation rounding under two scale granularities: the
+    kernel's per-destination-row-block scale vs the oracle's per-tensor
+    scale.  Each rounds with error <= scale/2 per element, giving the
+    fused kernel's documented bound
+        |fused - oracle|[i, j] <= 0.5 * (s_blk(i) + s_tensor)
+                                      * sum_k |W_deq[k, j]|.
+    """
+    from repro.photonic.quant import QuantConfig, quantize_weights
+
+    pg = partition_graph(g, v=v, n=n)
+    bg = to_blocked(pg)
+    featp = jnp.asarray(pg.pad_features(g.node_feat))
+    f_in = g.node_feat.shape[1]
+    rng = np.random.default_rng(wseed)
+    w = jnp.asarray(rng.standard_normal((f_in, f_out)).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal((f_out,)).astype(np.float32))
+
+    h = np.asarray(aggregate_blocked(bg, featp, ReduceOp.SUM))
+    ref = np.asarray(dense_combine(jnp.asarray(h), w, b, quantized=True))
+    with aggregate_backend("pallas_fused"):
+        got = np.asarray(aggregate_combine_blocked(
+            bg, featp, w, b, reduce=ReduceOp.SUM, quantized=True))
+
+    s_tensor = max(np.abs(h).max(), 1e-12) / 127.0
+    blocks = h.reshape(bg.num_dst_groups, bg.v, f_in)
+    s_blk = np.maximum(np.abs(blocks).max(axis=(1, 2)), 1e-12) / 127.0
+    wq, sw = quantize_weights(np.asarray(w), QuantConfig())
+    colsum = np.abs(np.asarray(wq, np.float32) * np.asarray(sw)).sum(axis=0)
+    bound = (0.5 * (np.repeat(s_blk, bg.v) + s_tensor)[:, None]
+             * colsum[None, :])
+    diff = np.abs(got - ref)
+    assert np.all(diff <= bound + 1e-4), float((diff - bound).max())
+    if g.num_edges == 0:
+        # Every row is an all-zero aggregation: exact bias rows, both paths.
+        np.testing.assert_allclose(got, np.broadcast_to(np.asarray(b),
+                                                        got.shape), atol=1e-6)
 
 
 @settings(deadline=None)
