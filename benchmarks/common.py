@@ -29,12 +29,17 @@ def emit(name: str, us_per_call: float, derived):
 def environment_stamp() -> dict:
     """Fields every BENCH_JSON document carries, so ledger entries from
     different machines/backends are never compared as like-for-like:
-    device kind, jax version, and whether Pallas ran in interpret mode."""
+    device kind + count, jax version, and whether Pallas ran in interpret
+    mode.  ``num_devices`` is the *visible* device count (on CPU it
+    reflects --xla_force_host_platform_device_count), not what a given
+    bench actually sharded over — pass ``mesh=`` to ``bench_json`` for
+    that."""
     import jax  # deferred: common.py is imported by non-jax tooling too
 
     dev = jax.devices()[0]
     return {
         "device_kind": f"{dev.platform}:{dev.device_kind}",
+        "num_devices": len(jax.devices()),
         "jax_version": jax.__version__,
         "interpret": jax.default_backend() != "tpu",
     }
@@ -49,11 +54,15 @@ def _load_ledger(path: str) -> dict:
         return {}
 
 
-def bench_json(doc: dict) -> dict:
+def bench_json(doc: dict, mesh=None) -> dict:
     """Stamp ``doc`` with the environment, print the ``BENCH_JSON`` line,
     and persist it to ``BENCH.json`` under its ``bench`` name (migrating
-    any legacy per-PR ledger entries on the way)."""
+    any legacy per-PR ledger entries on the way).  ``mesh`` (a
+    jax.sharding.Mesh) additionally stamps the axis->size shape the bench
+    actually partitioned over."""
     doc = {**environment_stamp(), **doc}
+    if mesh is not None:
+        doc["mesh_shape"] = {a: int(s) for a, s in mesh.shape.items()}
     print("BENCH_JSON " + json.dumps(doc, default=float), flush=True)
     ledger = _load_ledger(BENCH_JSON_PATH)
     for legacy in _LEGACY_BENCH_PATHS:

@@ -51,8 +51,9 @@ from repro.core import (
     to_blocked,
 )
 from repro.gnn import build_model
+from repro.launch.mesh import make_data_mesh
 from repro.photonic.perf import GhostConfig, GnnModelSpec
-from repro.serving import GnnServeEngine
+from repro.serving import EngineRouter, GnnServeEngine
 
 
 def _graph_pool(count: int, f: int, seed: int) -> list[Graph]:
@@ -268,6 +269,122 @@ def run_mixed(ticks: int, arrivals_per_tick: int, working_set: int,
     return results
 
 
+# ---------------------------------------------------------------------------
+# Device scaling: the same closed-loop stream served by engines whose
+# executor pools partition the combine contraction over 1/2/4/8-device data
+# meshes (core.aggregate feature strategy under shard_scope).  On a CPU host
+# split into virtual devices (--xla_force_host_platform_device_count=8) the
+# devices share the same cores, so req/s is NOT expected to scale — the
+# sweep demonstrates the partitioned trace end-to-end and records per-count
+# req/s + p99 so real multi-chip hosts have a ledger slot to fill in.
+# ---------------------------------------------------------------------------
+
+
+def run_device_scaling(requests: int, working_set: int, slots: int,
+                       counts=(1, 2, 4, 8), f: int = 32,
+                       hidden: int = 64) -> dict:
+    stream = _request_stream(requests, working_set, f, seed=7)
+    model = build_model("gcn", f, 3, hidden=hidden)
+    params = model.init(jax.random.PRNGKey(2))
+    cfg = GhostConfig()
+
+    visible = len(jax.devices())
+    usable = [c for c in counts if c <= visible]
+    skipped = [c for c in counts if c > visible]
+    if skipped:
+        print(f"device_scaling: skipping counts {skipped} "
+              f"({visible} devices visible)", flush=True)
+
+    sweep = {}
+    top_mesh = None
+    for count in usable:
+        mesh = make_data_mesh(count) if count > 1 else None
+        engine = GnnServeEngine(cfg=cfg, slots=slots, mesh=mesh)
+        engine.register("gcn", model, params, task="node")
+        engine.run(stream)          # warm-up: compile the sharded trace
+        engine.reset_metrics()
+        report = engine.run(stream)
+        sweep[str(count)] = {
+            "num_devices": count,
+            "req_per_s": report.req_per_s,
+            "p50_latency_ms": report.p50_latency_ms,
+            "p99_latency_ms": report.p99_latency_ms,
+            "topology": report.topology,
+        }
+        emit(f"serving/devices_{count}",
+             0.0 if not report.req_per_s else 1e6 / report.req_per_s,
+             f"req_s={report.req_per_s:.1f};p99={report.p99_latency_ms:.1f}ms")
+        if mesh is not None:
+            top_mesh = mesh
+    doc = {
+        "bench": "serving_device_scaling",
+        "requests": requests,
+        "working_set": working_set,
+        "slots": slots,
+        "f": f,
+        "hidden": hidden,
+        "strategy": "feature",
+        "counts": usable,
+        "sweep": sweep,
+        "note": "CPU host-split devices share cores; this sweep validates "
+                "the sharded trace end-to-end rather than measuring "
+                "multi-chip speedup",
+    }
+    return bench_json(doc, mesh=top_mesh)
+
+
+# ---------------------------------------------------------------------------
+# Replica router: a skewed hot/cold catalog behind N engine replicas.  The
+# hot model registers everywhere (traffic load-balances by queue depth);
+# the cold model pins to one replica.  The ledger entry records per-replica
+# served counts so placement behavior is visible, not just aggregate req/s.
+# ---------------------------------------------------------------------------
+
+
+def run_router(requests: int, working_set: int, slots: int,
+               replicas: int = 2) -> dict:
+    hot = build_model("gcn", F_SMALL, 3, hidden=8)
+    cold = build_model("sage", F_SMALL, 3, hidden=8)
+    ks = jax.random.split(jax.random.PRNGKey(3), 2)
+    router = EngineRouter(replicas, cfg=GhostConfig(), slots=slots)
+    router.register("hot_gcn", hot, hot.init(ks[0]), hot=True, task="node")
+    router.register("cold_sage", cold, cold.init(ks[1]), task="node")
+
+    pools = {
+        "hot_gcn": _graph_pool(working_set, F_SMALL, seed=20),
+        "cold_sage": _graph_pool(max(2, working_set // 2), F_SMALL, seed=21),
+    }
+    rng = np.random.default_rng(4)
+    stream = []
+    for _ in range(requests):
+        mid = "hot_gcn" if rng.random() < 0.8 else "cold_sage"
+        pool = pools[mid]
+        stream.append((mid, pool[int(rng.integers(0, len(pool)))]))
+
+    router.run(stream)          # warm-up: compile every replica's traces
+    router.reset_metrics()
+    report = router.run(stream)
+    per_replica_served = {name: info["served"]
+                          for name, info in report.replicas.items()}
+    emit("serving/router",
+         0.0 if not report.req_per_s else 1e6 / report.req_per_s,
+         f"req_s={report.req_per_s:.1f};replicas={per_replica_served}")
+    return bench_json({
+        "bench": "serving_router",
+        "requests": requests,
+        "working_set": working_set,
+        "slots": slots,
+        "num_replicas": replicas,
+        "req_per_s": report.req_per_s,
+        "p50_latency_ms": report.p50_latency_ms,
+        "p99_latency_ms": report.p99_latency_ms,
+        "per_model": report.per_model,
+        "per_replica_served": per_replica_served,
+        "replicas": report.replicas,
+        "traces_compiled": report.traces_compiled,
+    })
+
+
 def run(quick: bool = True, requests: int | None = None,
         working_set: int = 10, slots: int = 8, backend: str = "jnp",
         include_naive: bool = True, include_mixed: bool = True,
@@ -349,10 +466,31 @@ def main():
                     help="request arrivals per tick in the mixed trace")
     ap.add_argument("--max-waiting", type=int, default=64,
                     help="admission bound for the mixed trace")
+    ap.add_argument("--device-scaling", action="store_true",
+                    help="run ONLY the 1/2/4/8-device scaling sweep "
+                         "(start the process under "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+                         "on CPU hosts)")
+    ap.add_argument("--router", action="store_true",
+                    help="run ONLY the replica-router benchmark")
+    ap.add_argument("--replicas", type=int, default=2,
+                    help="replica count for --router")
+    ap.add_argument("--counts", type=str, default="1,2,4,8",
+                    help="comma-separated device counts for --device-scaling")
     args = ap.parse_args()
     if args.working_set < 1 or args.slots < 1 or (
             args.requests is not None and args.requests < 1):
         ap.error("--requests, --working-set and --slots must be >= 1")
+    if args.device_scaling or args.router:
+        requests = args.requests or (16 if not args.full else 128)
+        if args.device_scaling:
+            counts = tuple(int(c) for c in args.counts.split(","))
+            run_device_scaling(requests, min(args.working_set, 6),
+                               args.slots, counts=counts)
+        if args.router:
+            run_router(requests, min(args.working_set, 6), args.slots,
+                       replicas=args.replicas)
+        return
     run(quick=not args.full, requests=args.requests,
         working_set=args.working_set, slots=args.slots,
         backend=args.backend, include_naive=not args.no_naive,

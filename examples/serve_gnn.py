@@ -15,6 +15,17 @@ preprocessing-cache hit rate, the bounded jit-trace count (<= |models| x
 
 Run:  PYTHONPATH=src python examples/serve_gnn.py --requests 40 \
           --scheduler occupancy --max-waiting 32
+
+Multi-device: ``--devices N`` builds a 1-D data mesh over the first N
+local devices (launch.mesh.make_data_mesh) and hands it to the engine;
+every executor trace then partitions its fp32 combine contractions across
+the mesh (core.aggregate shard_scope, feature-dim strategy — few-ULP vs
+single-device; quantized GIN combines stay single-device since the
+per-tensor int8 scale is a global reduction).  On a CPU host, split the
+platform into virtual devices first:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python examples/serve_gnn.py --devices 8
 """
 
 import argparse
@@ -46,10 +57,20 @@ def main():
                     default="reject")
     ap.add_argument("--quantized", action="store_true",
                     help="route the GIN combines through the photonic 8-bit MVM")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="partition executor traces over a 1-D mesh of this "
+                         "many devices (CPU hosts: set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count first)")
     ap.add_argument("--train-steps", type=int, default=60)
     args = ap.parse_args()
     if args.requests < 1 or args.working_set < 1 or args.slots < 1:
         ap.error("--requests, --working-set and --slots must be >= 1")
+    if args.devices < 1:
+        ap.error("--devices must be >= 1")
+    mesh = None
+    if args.devices > 1:
+        from repro.launch.mesh import make_data_mesh
+        mesh = make_data_mesh(args.devices)  # raises with the XLA_FLAGS hint
 
     # Offline: build the catalog.  The GIN graph classifier is trained
     # (deployment-side training); the node taggers ship with fresh params —
@@ -69,7 +90,7 @@ def main():
     engine = GnnServeEngine(
         cfg=cfg, slots=args.slots, backend=args.backend,
         scheduler=args.scheduler, max_waiting=args.max_waiting,
-        admission_policy=args.admission_policy)
+        admission_policy=args.admission_policy, mesh=mesh)
     engine.register("gin_mutag", gin, gin_params, task="graph",
                     spec=GnnModelSpec.gin(f_gin, 16, 2, mlp_layers=2),
                     quantized=args.quantized, dataset_name="Mutag")

@@ -4,15 +4,21 @@ from repro.core.partition import PartitionedGraph, PartitionStats, partition_gra
 from repro.core.aggregate import (
     AGGREGATE_BACKENDS,
     COMBINE_ORDERS,
+    SHARD_STRATEGIES,
     BlockedGraph,
     CombinePlan,
     KernelSite,
     ReduceOp,
+    ShardContext,
+    ShardedBlockedGraph,
+    ShardPlan,
     active_aggregate_backend,
     active_kernel_resolver,
+    active_shard_context,
     aggregate_backend,
     aggregate_blocked,
     aggregate_combine_blocked,
+    aggregate_combine_sharded,
     aggregate_edges,
     attention_aggregate_blocked,
     blocked_degrees,
@@ -20,7 +26,10 @@ from repro.core.aggregate import (
     dense_combine,
     kernel_config_scope,
     plan_combine_order,
+    plan_shard_strategy,
     planner_decisions,
+    shard_blocked,
+    shard_scope,
     to_blocked,
     with_degrees,
 )

@@ -155,11 +155,79 @@ def kernel_config_scope(resolver):
       * ``block_f`` — Optional[int]: feature tile width of the unfused
         SpMM kernel.
       * ``lane``    — Optional[int]: lane padding of the fused kernel.
+      * ``shard``   — Optional[str]: consulted only under an active
+        ``shard_scope``; ``"none"`` pins the site to the single-device
+        lowering, anything else keeps the scope's strategy.
 
     Scopes nest and are per-thread, mirroring ``aggregate_backend``.
     """
     stack = _resolver_stack()
     stack.append(resolver)
+    try:
+        yield
+    finally:
+        stack.pop()
+
+
+# ---------------------------------------------------------------------------
+# Shard scope: an optional thread-local (mesh, axis) selection that routes
+# aggregate_combine_blocked through the multi-device feature-dim partition
+# (see the "Sharded execution" section below).  Like the backend stack and
+# the kernel-config resolver, the scope is consulted at trace time and is
+# per-thread, so one executor's mesh never leaks into another thread's
+# traces.
+# ---------------------------------------------------------------------------
+
+
+class ShardContext(NamedTuple):
+    """Active mesh selection for sharded aggregate+combine lowering."""
+
+    mesh: object        # jax.sharding.Mesh
+    axis: str           # 1-D partition axis name (conventionally "data")
+
+    @property
+    def num_shards(self) -> int:
+        return int(self.mesh.shape[self.axis])
+
+
+_SHARD_TLS = threading.local()
+
+
+def _shard_stack() -> list:
+    stack = getattr(_SHARD_TLS, "stack", None)
+    if stack is None:
+        stack = _SHARD_TLS.stack = [None]
+    return stack
+
+
+def active_shard_context() -> Optional[ShardContext]:
+    return _shard_stack()[-1]
+
+
+@contextlib.contextmanager
+def shard_scope(mesh, axis: str = "data"):
+    """Route blocked aggregate+combine stages across a device mesh.
+
+    Inside the scope, ``aggregate_combine_blocked`` lowers SUM/MEAN/MAX
+    non-quantized stages through the feature-dim partition
+    (``aggregate_combine_sharded``'s "feature" strategy): each device owns
+    an F_in slice of the SpMM and the matching combine-weight rows, and one
+    ``psum`` over the contracted dimension rebuilds the output.  This is
+    the strategy that needs no host-side graph resharding, so it drops into
+    existing jit traces (including vmapped serving executors) untouched.
+
+    ``mesh=None`` suppresses any enclosing scope — the sharded kernels use
+    it so their per-device bodies never recurse into the router.  Scopes
+    nest and are per-thread, mirroring ``aggregate_backend``.
+    """
+    ctx = None
+    if mesh is not None:
+        if axis not in mesh.axis_names:
+            raise ValueError(f"mesh has no axis '{axis}'; "
+                             f"axes are {tuple(mesh.axis_names)}")
+        ctx = ShardContext(mesh=mesh, axis=axis)
+    stack = _shard_stack()
+    stack.append(ctx)
     try:
         yield
     finally:
@@ -395,6 +463,23 @@ def clear_planner_log() -> None:
     _plan_log().clear()
 
 
+def _order_flops(b: int, v: int, n: int, g_dst: int, g_src: int,
+                 f_in: int, f_out: int) -> tuple[int, int]:
+    """(aggregate_first, combine_first) FLOP totals for one stage pair."""
+    agg_first = 2 * b * v * n * f_in + 2 * g_dst * v * f_in * f_out
+    comb_first = 2 * g_src * n * f_in * f_out + 2 * b * v * n * f_out
+    return agg_first, comb_first
+
+
+def _plan_order_from_geom(b: int, v: int, n: int, g_dst: int, g_src: int,
+                          f_in: int, f_out: int) -> str:
+    """The auto order decision from raw geometry — used by the sharded
+    forward, which must plan on GLOBAL tile counts (a per-shard plan could
+    flip the choice and break bit-exactness vs the single-device run)."""
+    agg_first, comb_first = _order_flops(b, v, n, g_dst, g_src, f_in, f_out)
+    return "aggregate_first" if agg_first <= comb_first else "combine_first"
+
+
 def plan_combine_order(bg: BlockedGraph, f_in: int, f_out: int,
                        order: str = "auto") -> CombinePlan:
     """Choose the aggregate/combine execution order from static FLOPs.
@@ -407,12 +492,8 @@ def plan_combine_order(bg: BlockedGraph, f_in: int, f_out: int,
         raise ValueError(f"unknown combine order '{order}'; "
                          f"expected one of {COMBINE_ORDERS}")
     b = int(bg.blocks.shape[0])
-    spmm_flops_in = 2 * b * bg.v * bg.n * f_in
-    spmm_flops_out = 2 * b * bg.v * bg.n * f_out
-    dense_after = 2 * bg.num_dst_groups * bg.v * f_in * f_out
-    dense_before = 2 * bg.num_src_groups * bg.n * f_in * f_out
-    agg_first = spmm_flops_in + dense_after
-    comb_first = dense_before + spmm_flops_out
+    agg_first, comb_first = _order_flops(
+        b, bg.v, bg.n, bg.num_dst_groups, bg.num_src_groups, f_in, f_out)
     if order == "auto":
         order = "aggregate_first" if agg_first <= comb_first else "combine_first"
     return CombinePlan(
@@ -520,9 +601,22 @@ def aggregate_combine_blocked(
             reduce=str(reduce.value), dtype=str(feat_padded.dtype),
             quantized=bool(quantized), backend=backend))
 
+    # Shard routing (see shard_scope): the feature-dim partition applies to
+    # every stage whose epilogue is linear in the aggregated features — the
+    # int8 MVM's per-tensor activation scale is a global max, so quantized
+    # sites stay on the single-device lowering (the dst_block strategy of
+    # aggregate_combine_sharded shards those exactly).  A kernel config can
+    # veto with shard="none".
+    ctx = active_shard_context()
+    shard_override = getattr(cfg, "shard", None) if cfg is not None else None
+    use_shard = (ctx is not None and ctx.num_shards > 1 and not quantized
+                 and shard_override != "none")
+
     # MAX and the int8 MVM are nonlinear: the combine cannot move through
     # them, so the order is pinned regardless of request or tuner choice.
-    pinned = reduce == ReduceOp.MAX or quantized
+    # The feature partition likewise pins aggregate-first — it splits the
+    # SpMM width and the combine contraction together.
+    pinned = reduce == ReduceOp.MAX or quantized or use_shard
     if pinned:
         order = "aggregate_first"
     elif order == "auto" and cfg is not None and getattr(
@@ -532,6 +626,10 @@ def aggregate_combine_blocked(
     _record_plan(bg, f_in, f_out, reduce, backend, plan, quantized)
 
     block_f = getattr(cfg, "block_f", None) if cfg is not None else None
+
+    if use_shard:
+        return _feature_sharded(bg, feat_padded, w, bias, reduce, activation,
+                                ctx, block_f)
 
     if plan.order == "combine_first":
         # Narrow the SpMM width first; the blocked aggregation then runs on
@@ -616,3 +714,312 @@ def attention_aggregate_blocked(
 
     out = num / jnp.maximum(denom, 1e-30)[..., None]
     return out.reshape(bg.num_dst_groups * bg.v, heads, f)
+
+
+# ---------------------------------------------------------------------------
+# Sharded execution: one blocked aggregate+combine stage across a 1-D device
+# mesh.  Two partition strategies, mirroring the two dimensions of the fused
+# SpMM (the scaling lever both GNN-acceleration surveys in PAPERS.md name —
+# partition-parallel execution across compute units):
+#
+#   "dst_block" — partition by destination block-row.  Each device owns a
+#       contiguous slice of destination groups plus the CSR-sorted edge
+#       tiles targeting them (owner-exclusive: block_row is non-decreasing,
+#       so one host-side pass splits the tile list).  No cross-device
+#       collective is needed for SUM/MEAN/MAX — every destination row is
+#       reduced entirely on its owner — and per-device tile order equals
+#       the single-device order, so outputs are BIT-EXACT vs the unsharded
+#       forward on every backend (the one exception: quantized sites whose
+#       per-device lowering is the *unfused* per-tensor int8 combine — its
+#       activation scale spans all rows; the fused per-row-block epilogue
+#       shards exactly).  Requires host-side prep (``shard_blocked``).
+#
+#   "feature" — partition the combine contraction.  Each device owns an
+#       F_in slice of the features and the matching combine-weight rows;
+#       the SpMM runs at F_in/D width per device and one ``psum`` over the
+#       contracted dimension rebuilds [G_dst*V, F_out].  Association order
+#       of the psum differs from the single-device matmul, so outputs agree
+#       to a few ULP (documented tolerance).  Needs no graph resharding, so
+#       it drops into existing traces — including vmapped serving
+#       executors — via ``shard_scope``.
+# ---------------------------------------------------------------------------
+
+SHARD_STRATEGIES = ("auto", "dst_block", "feature")
+
+
+class ShardedBlockedGraph(NamedTuple):
+    """A BlockedGraph re-tiled for a D-way destination-block partition.
+
+    Device d owns destination groups [d*local, (d+1)*local) of a group
+    space padded up to ``num_shards * local_dst_groups`` (the pad groups
+    receive no tiles and their output rows are sliced off again).  Tile
+    slots are padded per shard to ``tile_cap`` with all-zero tiles — exact
+    no-ops for every reduce mode — and ``block_row`` is rebased to
+    device-LOCAL group ids (still non-decreasing per shard, preserving the
+    CSR-sortedness the Pallas kernels require).  ``block_col`` stays
+    global: source features are replicated.
+    """
+
+    blocks: jax.Array       # [D, Bcap, V, N]
+    block_row: jax.Array    # [D, Bcap] int32, device-local dst groups
+    block_col: jax.Array    # [D, Bcap] int32, global src groups
+    deg: jax.Array          # [D, local_dst_groups * V] MEAN degrees
+    num_shards: int
+    local_dst_groups: int
+    num_dst_groups: int     # global, unpadded
+    num_src_groups: int
+    v: int
+    n: int
+    num_nodes: int
+    num_blocks: int         # global, unpadded tile count (order planning)
+
+    @property
+    def tile_cap(self) -> int:
+        return int(self.blocks.shape[1])
+
+
+def shard_blocked(bg: BlockedGraph, num_shards: int,
+                  tile_cap: Optional[int] = None) -> ShardedBlockedGraph:
+    """Host-side destination-block partition of a BlockedGraph.
+
+    Splits the CSR-sorted tile list by destination-group owner (a
+    contiguous slice per shard), pads every shard to ``tile_cap`` tiles
+    (default: the busiest shard's count) with zero tiles, and rebases
+    ``block_row`` to device-local ids.  Pure numpy — this is preprocessing,
+    the sharded analogue of ``serving.bucketing.pad_partition_to_bucket``.
+    """
+    if num_shards < 1:
+        raise ValueError("num_shards must be >= 1")
+    blocks = np.asarray(bg.blocks)
+    row = np.asarray(bg.block_row)
+    col = np.asarray(bg.block_col)
+    gd = bg.num_dst_groups
+    local = -(-gd // num_shards)          # ceil: pad groups, never drop any
+    owner = np.minimum(row // local, num_shards - 1)
+    counts = np.bincount(owner, minlength=num_shards)
+    need = max(int(counts.max()), 1)
+    if tile_cap is None:
+        tile_cap = need
+    elif tile_cap < need:
+        raise ValueError(f"tile_cap {tile_cap} < busiest shard ({need} tiles)")
+    sb = np.zeros((num_shards, tile_cap) + blocks.shape[1:], blocks.dtype)
+    # Padding tiles keep per-shard block_row non-decreasing (last local
+    # group) and block_col in range; all-zero tiles contribute nothing.
+    sr = np.full((num_shards, tile_cap), local - 1, np.int32)
+    sc = np.full((num_shards, tile_cap), bg.num_src_groups - 1, np.int32)
+    for d in range(num_shards):
+        sel = owner == d
+        k = int(counts[d])
+        sb[d, :k] = blocks[sel]
+        sr[d, :k] = row[sel] - d * local
+        sc[d, :k] = col[sel]
+    deg = np.zeros((num_shards * local * bg.v,), np.float32)
+    deg[: gd * bg.v] = np.asarray(blocked_degrees(bg))
+    return ShardedBlockedGraph(
+        blocks=jnp.asarray(sb),
+        block_row=jnp.asarray(sr),
+        block_col=jnp.asarray(sc),
+        deg=jnp.asarray(deg.reshape(num_shards, local * bg.v)),
+        num_shards=num_shards,
+        local_dst_groups=local,
+        num_dst_groups=gd,
+        num_src_groups=bg.num_src_groups,
+        v=bg.v,
+        n=bg.n,
+        num_nodes=bg.num_nodes,
+        num_blocks=int(blocks.shape[0]),
+    )
+
+
+class ShardPlan(NamedTuple):
+    """Static cost sketch behind one strategy decision (roofline inputs)."""
+
+    strategy: str            # "dst_block" | "feature"
+    num_shards: int
+    psum_bytes: int          # collective traffic per stage (0 = none)
+    bit_exact: bool          # vs the single-device blocked forward
+
+    def to_dict(self) -> dict:
+        return dict(self._asdict())
+
+
+def plan_shard_strategy(num_dst_groups: int, v: int, f_out: int,
+                        num_shards: int, *, reduce: ReduceOp = ReduceOp.SUM,
+                        quantized: bool = False,
+                        sharded_graph: bool = False,
+                        strategy: str = "auto") -> ShardPlan:
+    """Choose the partition strategy from static shape facts.
+
+    The destination-block partition wins whenever host-prepped tiles are
+    available (``sharded_graph``): it moves no bytes between devices and is
+    bit-exact.  The feature partition is the fallback that needs no prep
+    but pays one fp32 ``psum`` of the [G_dst*V, F_out] output per stage.
+    Quantized stages only shard destination-wise (the per-tensor int8
+    activation scale does not decompose over feature slices).
+    """
+    if strategy not in SHARD_STRATEGIES:
+        raise ValueError(f"unknown shard strategy '{strategy}'; "
+                         f"expected one of {SHARD_STRATEGIES}")
+    if strategy == "auto":
+        strategy = "dst_block" if (sharded_graph or quantized) else "feature"
+    if strategy == "feature" and quantized:
+        raise ValueError("quantized stages cannot use the feature partition "
+                         "(per-tensor int8 scale is a global reduction); "
+                         "prep a ShardedBlockedGraph for dst_block instead")
+    psum = (0 if strategy == "dst_block"
+            else num_dst_groups * v * f_out * 4 * max(num_shards - 1, 0))
+    return ShardPlan(strategy=strategy, num_shards=num_shards,
+                     psum_bytes=psum,
+                     bit_exact=strategy == "dst_block" and not quantized)
+
+
+def _feature_sharded(bg: BlockedGraph, feat_padded: jax.Array, w: jax.Array,
+                     bias: Optional[jax.Array], reduce: ReduceOp,
+                     activation: Optional[str], ctx: ShardContext,
+                     block_f: Optional[int]) -> jax.Array:
+    """Feature-dim partition: SpMM over an F_in slice per device, psum over
+    the contracted combine dimension.  Works under vmap/jit (all operands
+    are explicit shard_map arguments, so outer batching rules apply)."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    d = ctx.num_shards
+    f_in = int(feat_padded.shape[-1])
+    f_out = int(w.shape[-1])
+    pad = (-f_in) % d
+    # Zero feature columns x zero weight rows are exact no-ops for SUM/MEAN
+    # (0 contribution) and for MAX (all-zero columns aggregate to 0, then
+    # meet zero weight rows), so padding F_in to a shard multiple is safe.
+    featp = jnp.pad(feat_padded, ((0, 0), (0, pad)))
+    wp = jnp.pad(w.astype(feat_padded.dtype), ((0, pad), (0, 0)))
+    bias_row = (jnp.zeros((f_out,), feat_padded.dtype) if bias is None
+                else bias.astype(feat_padded.dtype))
+    deg = blocked_degrees(bg).astype(feat_padded.dtype)
+    axis = ctx.axis
+
+    def body(blocks, row, col, dg, featl, wl, bias_l):
+        lbg = BlockedGraph(
+            blocks=blocks, block_row=row, block_col=col,
+            num_dst_groups=bg.num_dst_groups,
+            num_src_groups=bg.num_src_groups,
+            v=bg.v, n=bg.n, num_nodes=bg.num_nodes, deg=dg)
+        # MEAN normalizes per destination row — exact on a column slice.
+        agg = aggregate_blocked(lbg, featl, reduce, block_f=block_f)
+        partial = agg.astype(jnp.float32) @ wl.astype(jnp.float32)
+        out = jax.lax.psum(partial, axis)
+        # Bias and activation apply once, after the contraction completes;
+        # every device computes the same replicated value.
+        return _apply_activation(out + bias_l.astype(out.dtype), activation)
+
+    fn = shard_map(
+        body, ctx.mesh,
+        in_specs=(P(), P(), P(), P(),            # graph replicated
+                  P(None, axis),                 # feature columns split
+                  P(axis, None),                 # matching weight rows
+                  P()),
+        out_specs=P(),
+        check_rep=False)
+    out = fn(bg.blocks, bg.block_row, bg.block_col, deg, featp, wp, bias_row)
+    return out.astype(feat_padded.dtype)
+
+
+def aggregate_combine_sharded(
+    graph,                          # ShardedBlockedGraph | BlockedGraph
+    feat_padded: jax.Array,         # [G_src * N, F_in] (replicated)
+    w: jax.Array,                   # [F_in, F_out]
+    bias: Optional[jax.Array] = None,
+    *,
+    mesh,
+    axis: str = "data",
+    reduce: ReduceOp = ReduceOp.SUM,
+    activation: Optional[str] = None,
+    order: str = "auto",
+    quantized: bool = False,
+    strategy: str = "auto",
+) -> jax.Array:
+    """One aggregate+combine stage partitioned across a 1-D device mesh.
+
+    ``graph`` selects the partition: a ``ShardedBlockedGraph`` (from
+    ``shard_blocked``) runs the destination-block strategy — owner-exclusive
+    destination rows, no collectives, bit-exact vs the single-device
+    ``aggregate_combine_blocked`` on every backend; a plain ``BlockedGraph``
+    runs the feature-dim strategy (psum over the contracted combine
+    dimension, few-ULP tolerance).  The active aggregate backend and any
+    installed kernel-config resolver apply inside each device's local
+    lowering, so the fused epilogue kernel and tuned tile widths carry over
+    per shard unchanged.
+
+    Returns [G_dst * V, F_out] (global, padding groups sliced off).
+    """
+    sharded = isinstance(graph, ShardedBlockedGraph)
+    plan = plan_shard_strategy(
+        graph.num_dst_groups, graph.v, int(w.shape[-1]),
+        int(mesh.shape[axis]), reduce=reduce, quantized=quantized,
+        sharded_graph=sharded, strategy=strategy)
+    if plan.strategy == "feature":
+        if sharded:
+            raise ValueError("feature strategy takes a plain BlockedGraph "
+                             "(source features are partitioned, not tiles)")
+        ctx = ShardContext(mesh=mesh, axis=axis)
+        if ctx.num_shards == 1:
+            return aggregate_combine_blocked(
+                graph, feat_padded, w, bias, reduce=reduce,
+                activation=activation, order=order, quantized=quantized)
+        return _feature_sharded(graph, feat_padded, w, bias, reduce,
+                                activation, ctx, None)
+    if not sharded:
+        raise ValueError("dst_block strategy needs a ShardedBlockedGraph "
+                         "(host-side prep: shard_blocked(bg, num_shards))")
+    return _dst_block_sharded(graph, feat_padded, w, bias, reduce,
+                              activation, order, quantized, mesh, axis)
+
+
+def _dst_block_sharded(sbg: ShardedBlockedGraph, feat_padded: jax.Array,
+                       w: jax.Array, bias: Optional[jax.Array],
+                       reduce: ReduceOp, activation: Optional[str],
+                       order: str, quantized: bool, mesh, axis) -> jax.Array:
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    d = int(mesh.shape[axis])
+    if d != sbg.num_shards:
+        raise ValueError(f"graph was sharded {sbg.num_shards}-way but mesh "
+                         f"axis '{axis}' has {d} devices")
+    f_in = int(feat_padded.shape[-1])
+    f_out = int(w.shape[-1])
+    # Resolve the execution order from the GLOBAL geometry, so every
+    # device lowers the same order the single-device forward would pick —
+    # a per-shard FLOP plan could flip the decision and break bit-exactness.
+    if reduce == ReduceOp.MAX or quantized:
+        order = "aggregate_first"
+    elif order == "auto":
+        order = _plan_order_from_geom(
+            sbg.num_blocks, sbg.v, sbg.n, sbg.num_dst_groups,
+            sbg.num_src_groups, f_in, f_out)
+    local = sbg.local_dst_groups
+    bias_arg = [] if bias is None else [bias]
+
+    def body(blocks, row, col, dg, featl, wl, *bias_l):
+        lbg = BlockedGraph(
+            blocks=blocks[0], block_row=row[0], block_col=col[0],
+            num_dst_groups=local, num_src_groups=sbg.num_src_groups,
+            v=sbg.v, n=sbg.n, num_nodes=local * sbg.v, deg=dg[0])
+        # Suppress any enclosing shard_scope: the per-device body IS the
+        # sharded lowering; recursing into the feature router would nest
+        # shard_maps.
+        with shard_scope(None):
+            return aggregate_combine_blocked(
+                lbg, featl, wl, bias_l[0] if bias_l else None,
+                reduce=reduce, activation=activation, order=order,
+                quantized=quantized)
+
+    fn = shard_map(
+        body, mesh,
+        in_specs=(P(axis), P(axis), P(axis), P(axis),   # owner-split graph
+                  P(), P()) + tuple(P() for _ in bias_arg),
+        out_specs=P(axis),
+        check_rep=False)
+    out = fn(sbg.blocks, sbg.block_row, sbg.block_col, sbg.deg,
+             feat_padded, w, *bias_arg)
+    # Padding destination groups (group-count rounding) are sliced off.
+    return out[: sbg.num_dst_groups * sbg.v]

@@ -194,6 +194,67 @@ def auto_shard_cache(cache_tree, batch_size: int, mesh: Mesh):
     return jax.tree.unflatten(treedef, [one(p, l) for p, l in flat])
 
 
+# ---------------------------------------------------------------------------
+# Graph-aware specs: PartitionSpecs for the blocked-GNN containers
+# (core.aggregate.BlockedGraph / ShardedBlockedGraph), so the serving path
+# can place graph structure with the same machinery that places parameters.
+# A ShardedBlockedGraph carries an explicit leading owner dimension — its
+# tile/degree leaves split on the data axis; a plain BlockedGraph has no
+# owner dimension and is replicated (its sharded execution partitions the
+# *feature* operand instead; see core.aggregate.shard_scope).
+# ---------------------------------------------------------------------------
+
+# ShardedBlockedGraph array fields whose leading dim is the shard owner.
+_OWNER_SPLIT_FIELDS = ("blocks", "block_row", "block_col", "deg")
+
+
+def blocked_graph_specs(graph, axis: str = "data"):
+    """Leaf-name -> PartitionSpec for a (Sharded)BlockedGraph.
+
+    Returns a dict over the container's *array* fields only (the static
+    ints are trace constants, not placeable leaves).
+    """
+    from repro.core.aggregate import BlockedGraph, ShardedBlockedGraph
+
+    if isinstance(graph, ShardedBlockedGraph):
+        return {name: P(axis) for name in _OWNER_SPLIT_FIELDS}
+    if isinstance(graph, BlockedGraph):
+        specs = {"blocks": P(), "block_row": P(), "block_col": P()}
+        if graph.deg is not None:
+            specs["deg"] = P()
+        return specs
+    raise TypeError(f"expected BlockedGraph or ShardedBlockedGraph, "
+                    f"got {type(graph).__name__}")
+
+
+def blocked_graph_shardings(graph, mesh: Mesh, axis: str = "data") -> dict:
+    """Leaf-name -> NamedSharding for a (Sharded)BlockedGraph on ``mesh``."""
+    return {name: NamedSharding(mesh, spec)
+            for name, spec in blocked_graph_specs(graph, axis).items()}
+
+
+def estimate_graph_bytes_per_device(graph, num_shards: int = 1) -> float:
+    """Structure bytes each device holds under the graph's natural specs.
+
+    Owner-split leaves of a ShardedBlockedGraph divide by the shard count
+    (their leading dim is the owner dim); everything else is replicated.
+    A plain BlockedGraph replicates wholesale regardless of ``num_shards``.
+    """
+    from repro.core.aggregate import ShardedBlockedGraph
+
+    if num_shards < 1:
+        raise ValueError("num_shards must be >= 1")
+    split = isinstance(graph, ShardedBlockedGraph)
+    total = 0.0
+    for name in _OWNER_SPLIT_FIELDS:
+        leaf = getattr(graph, name, None)
+        if leaf is None:
+            continue
+        nbytes = float(np.prod(leaf.shape)) * jax.numpy.dtype(leaf.dtype).itemsize
+        total += nbytes / (num_shards if split else 1)
+    return total
+
+
 def estimate_bytes_per_device(tree, plan: ShardingPlan, mesh: Mesh,
                               optimizer_multiplier: float = 0.0) -> float:
     """Parameter bytes per device under the plan (+ optional optimizer

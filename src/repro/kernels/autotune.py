@@ -90,6 +90,13 @@ class KernelConfig:
     order: Optional[str] = None       # "aggregate_first" | "combine_first"
     block_f: Optional[int] = None     # unfused SpMM feature tile width
     lane: Optional[int] = None        # fused kernel lane padding
+    shard: Optional[str] = None       # "feature" | "none": multi-device
+                                      # routing under an active shard_scope
+                                      # ("none" pins a site single-device).
+                                      # Not searched by the autotuner — a
+                                      # deployment-level override, since the
+                                      # mesh is chosen per executor pool,
+                                      # not per shape class.
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)

@@ -47,3 +47,37 @@ def make_debug_mesh(devices_per_axis: tuple[int, ...] = (2, 2),
 def data_axes(mesh) -> tuple[str, ...]:
     """Mesh axes usable for batch sharding, largest stride first."""
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+# The CPU-CI recipe for multi-device testing: XLA splits the host platform
+# into N virtual devices.  Must be set BEFORE jax initializes (any
+# jax.devices() call pins the count), which is why it is an env-var string
+# here rather than a function that sets it.
+HOST_DEVICE_RECIPE = 'XLA_FLAGS="--xla_force_host_platform_device_count=8"'
+
+
+def make_data_mesh(num_devices: int | None = None, axis: str = "data"):
+    """1-D serving mesh over the first ``num_devices`` local devices.
+
+    This is the mesh the sharded blocked forward partitions over
+    (``core.aggregate.shard_scope`` / ``aggregate_combine_sharded``): one
+    named axis, conventionally "data" because destination block-rows and
+    feature slices are both batch-like partitions (no tensor-parallel
+    collectives beyond the feature strategy's contraction psum).
+
+    Unlike ``make_production_mesh`` this takes a device *count*, so a
+    device-scaling sweep can build 1/2/4/8-way meshes from one host
+    process (started under ``HOST_DEVICE_RECIPE`` on CPU).
+    """
+    import numpy as np
+    from jax.sharding import Mesh
+
+    devices = jax.devices()
+    n = len(devices) if num_devices is None else int(num_devices)
+    if n < 1:
+        raise ValueError("num_devices must be >= 1")
+    if n > len(devices):
+        raise ValueError(
+            f"asked for {n} devices but only {len(devices)} are visible; "
+            f"on CPU hosts start the process with {HOST_DEVICE_RECIPE}")
+    return Mesh(np.asarray(devices[:n]), (axis,))

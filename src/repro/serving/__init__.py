@@ -23,6 +23,7 @@ from repro.serving.cache import (
 )
 from repro.serving.engine import GnnServeEngine, QueueFullError, gcn_prepare
 from repro.serving.registry import ExecutorPool, ModelEntry, ModelRegistry
+from repro.serving.router import EngineRouter
 from repro.serving.report import RequestRecord, ServeReport, build_report
 from repro.serving.scheduler import (
     SCHEDULERS,

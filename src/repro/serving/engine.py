@@ -124,6 +124,15 @@ class GnnServeEngine:
       kernel_config: optional explicit ``KernelConfig``-like object applied
         to every kernel site — a deterministic override that beats the
         tuner (what tests pin).
+      mesh: optional 1-D device mesh (see ``launch.mesh.make_data_mesh``).
+        When given with >1 device on ``shard_axis``, every executor trace
+        runs its fp32 layers under ``core.aggregate.shard_scope``: the
+        combine contraction is partitioned along the feature dim with a
+        psum over the contracted axis (few-ULP drift vs single-device;
+        quantized models stay single-device inside the scope because their
+        per-tensor activation scale is a global reduction).  The trace key
+        is effectively (model_id, bucket, mesh) — one pool is one mesh.
+      shard_axis: mesh axis name the feature partition maps onto.
     """
 
     def __init__(
@@ -139,6 +148,8 @@ class GnnServeEngine:
         cache_capacity: int = 256,
         tuner=None,
         kernel_config=None,
+        mesh=None,
+        shard_axis: str = "data",
     ):
         self.cfg = cfg.validate()
         self.flags = flags.validate()
@@ -146,7 +157,8 @@ class GnnServeEngine:
         self.backend = backend
         self.registry = ModelRegistry()
         self.pool = ExecutorPool(slots=slots, backend=backend,  # validates
-                                 tuner=tuner, kernel_config=kernel_config)
+                                 tuner=tuner, kernel_config=kernel_config,
+                                 mesh=mesh, shard_axis=shard_axis)
         self.scheduler = make_scheduler(scheduler)
         self.admission = AdmissionController(max_waiting, admission_policy)
         self.cache = PreprocessCache(cache_capacity)
@@ -404,7 +416,8 @@ class GnnServeEngine:
                             admission_stats=self.admission.stats,
                             queue_max_wait_ticks=max(
                                 waiting_wait, self._max_dropped_wait_ticks),
-                            kernel_configs=self.pool.kernel_configs())
+                            kernel_configs=self.pool.kernel_configs(),
+                            topology=self.pool.topology())
 
     def reset_metrics(self) -> None:
         """Zero serving metrics while keeping compiled executors and cache

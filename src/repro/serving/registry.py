@@ -35,6 +35,7 @@ from repro.core.aggregate import (
     BlockedGraph,
     aggregate_backend,
     kernel_config_scope,
+    shard_scope,
     with_degrees,
 )
 from repro.serving.bucketing import Bucket
@@ -153,18 +154,45 @@ class ExecutorPool:
     """
 
     def __init__(self, slots: int, backend: str, *,
-                 tuner=None, kernel_config=None):
+                 tuner=None, kernel_config=None, mesh=None,
+                 shard_axis: str = "data"):
         if slots < 1:
             raise ValueError("slots must be >= 1")
         if backend not in AGGREGATE_BACKENDS:
             raise ValueError(f"unknown backend '{backend}'; expected one of "
                              f"{AGGREGATE_BACKENDS}")
+        if mesh is not None and shard_axis not in mesh.axis_names:
+            raise ValueError(f"mesh has no axis '{shard_axis}'; axes are "
+                             f"{tuple(mesh.axis_names)}")
         self.slots = slots
         self.backend = backend
         self.tuner = tuner
         self.kernel_config = kernel_config
+        # The pool's device topology: every trace it builds is keyed by
+        # (model_id, bucket) *within* this mesh — a pool IS one mesh, so
+        # the effective trace key is (model_id, bucket, mesh).  A 1-device
+        # mesh is equivalent to no mesh (the shard router is a no-op).
+        self.mesh = mesh
+        self.shard_axis = shard_axis
         self._executors: dict[tuple[str, Bucket], Callable] = {}
         self._trace_count = 0
+
+    @property
+    def num_shards(self) -> int:
+        if self.mesh is None:
+            return 1
+        return int(self.mesh.shape[self.shard_axis])
+
+    def topology(self) -> dict:
+        """Mesh topology baked into this pool's traces (report surface)."""
+        if self.mesh is None:
+            return {}
+        return {
+            "num_devices": self.num_shards,
+            "mesh_shape": {a: int(s) for a, s in self.mesh.shape.items()},
+            "shard_axis": self.shard_axis,
+            "strategy": "feature" if self.num_shards > 1 else "none",
+        }
 
     def kernel_configs(self) -> dict:
         """Shape-class -> config resolved so far (report surface)."""
@@ -201,6 +229,10 @@ class ExecutorPool:
         # the per-request path (the fp32 pooled sum depends on row count, so
         # pooling at the bucket shape would break bit-exactness).
         num_nodes = min(bucket.padded_dst, bucket.padded_src)
+        # A 1-device mesh is a no-op shard scope; None suppresses sharding
+        # entirely, so the trace is identical to the meshless pool's.
+        shard_mesh = self.mesh if self.num_shards > 1 else None
+        shard_axis = self.shard_axis
 
         def make_fwd(resolver, count_trace):
             def fwd(params, blocks, row, col, feat):
@@ -219,7 +251,9 @@ class ExecutorPool:
                 bg = with_degrees(bg)
                 # Backend and kernel-config selections are read at trace
                 # time, so they bake into this executor's compiled program.
-                with aggregate_backend(backend), kernel_config_scope(resolver):
+                with aggregate_backend(backend), \
+                        kernel_config_scope(resolver), \
+                        shard_scope(shard_mesh, shard_axis):
                     if task == "graph":
                         return model.node_embed_blocked(params, bg, feat,
                                                         quantized)

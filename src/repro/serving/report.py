@@ -71,6 +71,13 @@ class ServeReport:
     kernel_configs: dict = dataclasses.field(default_factory=dict)
                              # shape-class key -> live kernel config
                              # ({} = hardcoded defaults, no tuner/override)
+    topology: dict = dataclasses.field(default_factory=dict)
+                             # mesh topology baked into the executor traces
+                             # (num_devices / mesh_shape / shard_axis);
+                             # {} = single-device, no mesh
+    replicas: dict = dataclasses.field(default_factory=dict)
+                             # replica name -> per-replica summary (router
+                             # reports only; {} for a single engine)
 
     def to_json(self) -> str:
         return json.dumps(dataclasses.asdict(self), indent=2, default=float)
@@ -93,6 +100,12 @@ class ServeReport:
             f"across buckets {self.buckets}\n"
             + (f"  kernel configs: {self.kernel_configs}\n"
                if self.kernel_configs else "")
+            + (f"  mesh: {self.topology.get('num_devices')} devices "
+               f"{self.topology.get('mesh_shape')} "
+               f"(axis={self.topology.get('shard_axis')}, "
+               f"strategy={self.topology.get('strategy')})\n"
+               if self.topology else "")
+            + (f"  replicas: {self.replicas}\n" if self.replicas else "")
             + f"  GHOST hardware estimate: {self.hw_latency_s * 1e6:.1f} us, "
             f"{self.hw_energy_j * 1e3:.3f} mJ, {self.hw_req_per_s:.0f} req/s, "
             f"avg power {self.hw_avg_power_w:.1f} W"
@@ -109,6 +122,8 @@ def build_report(
     admission_stats=None,
     queue_max_wait_ticks: int = 0,
     kernel_configs: Optional[dict] = None,
+    topology: Optional[dict] = None,
+    replicas: Optional[dict] = None,
 ) -> ServeReport:
     lats = [r.latency_s for r in records]
     buckets: dict[str, int] = {}
@@ -146,4 +161,6 @@ def build_report(
         hw_req_per_s=len(records) / hw_lat if hw_lat > 0 else 0.0,
         hw_avg_power_w=hw_e / hw_lat if hw_lat > 0 else 0.0,
         kernel_configs=kernel_configs or {},
+        topology=topology or {},
+        replicas=replicas or {},
     )

@@ -1,0 +1,259 @@
+"""Replica router: N serving engines behind one submit/result surface.
+
+One ``GnnServeEngine`` is one executor pool on one mesh — scaling past a
+single pool means running several engine *replicas* and routing requests
+between them.  ``EngineRouter`` owns that seam:
+
+  placement (catalog-aware)
+      "hot" models register on every replica, so any replica can absorb
+      their traffic; "cold" models pin to exactly one replica (fewest
+      pinned models first), so the long tail of rarely-served models costs
+      one trace set instead of N.  Placement is decided at ``register``
+      time and never migrates — a model's compiled executors live where
+      its traffic lands.
+  routing (load-aware, admission-respecting)
+      each request goes to the eligible replica with the shortest waiting
+      queue; when that replica's admission controller rejects, the router
+      falls back through the remaining eligible replicas before giving up.
+      Every replica keeps its own admission bound — overload on one hot
+      replica sheds there without disturbing the others.
+  identity (global rids)
+      replica-local rids never leak: the router hands out global rids and
+      keeps the (replica, local rid) mapping for ``take_result``.
+  accounting (merged + per-replica)
+      ``report`` folds every replica's records into one ``ServeReport``
+      (same math a single engine would produce for the union stream) and
+      fills ``ServeReport.replicas`` with per-replica served counts,
+      admission outcomes, and mesh topology — the dashboard view of where
+      traffic actually went.
+
+The replicas are plain engines: everything pluggable on an engine
+(scheduler, admission policy, backend, tuner, mesh) is pluggable per
+router via ``**engine_kwargs``, applied uniformly to every replica.
+``meshes=`` overrides that uniformity for device placement — one mesh per
+replica, so a host's devices can be split between replicas rather than
+shared.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.core.graph import Graph
+from repro.serving.admission import AdmissionStats
+from repro.serving.cache import CacheStats
+from repro.serving.engine import GnnServeEngine, QueueFullError
+from repro.serving.report import ServeReport, build_report
+
+
+class EngineRouter:
+    """Catalog-aware request router over ``GnnServeEngine`` replicas.
+
+    Args:
+      num_replicas: how many engine replicas to build (>= 1).
+      meshes: optional sequence of one mesh (or None) per replica, so
+        replicas can own disjoint device slices; without it every replica
+        shares whatever ``mesh=`` is in ``engine_kwargs`` (usually None).
+      engine_kwargs: forwarded verbatim to every ``GnnServeEngine``.
+    """
+
+    def __init__(self, num_replicas: int = 2, *, meshes=None, **engine_kwargs):
+        if num_replicas < 1:
+            raise ValueError("num_replicas must be >= 1")
+        if meshes is not None:
+            meshes = list(meshes)
+            if len(meshes) != num_replicas:
+                raise ValueError(
+                    f"meshes has {len(meshes)} entries for "
+                    f"{num_replicas} replicas")
+            if "mesh" in engine_kwargs:
+                raise ValueError("pass either meshes= or mesh=, not both")
+        self.replicas: list[GnnServeEngine] = []
+        for i in range(num_replicas):
+            kwargs = dict(engine_kwargs)
+            if meshes is not None:
+                kwargs["mesh"] = meshes[i]
+            self.replicas.append(GnnServeEngine(**kwargs))
+        # model_id -> tuple of eligible replica indices (len>1 iff hot).
+        self._placement: dict[str, tuple[int, ...]] = {}
+        self._pinned_count = [0] * num_replicas  # cold models per replica
+        # global rid -> (replica index, replica-local rid)
+        self._rid_map: dict[int, tuple[int, int]] = {}
+        self._next_rid = 0
+
+    @property
+    def num_replicas(self) -> int:
+        return len(self.replicas)
+
+    # ------------------------------------------------------------------
+    # Catalog placement.
+    # ------------------------------------------------------------------
+
+    def register(self, model_id: str, model, params, *, hot: bool = False,
+                 replica: Optional[int] = None, **kwargs) -> tuple[int, ...]:
+        """Place one model and register it on its replica(s).
+
+        hot=True registers on every replica (traffic spreads by load);
+        otherwise the model pins to ``replica`` if given, else to the
+        replica carrying the fewest pinned models.  Returns the tuple of
+        replica indices serving this model.
+        """
+        if model_id in self._placement:
+            raise ValueError(f"model_id '{model_id}' already placed")
+        if hot:
+            if replica is not None:
+                raise ValueError("hot models go to every replica; "
+                                 "replica= only applies to cold models")
+            where = tuple(range(self.num_replicas))
+        else:
+            if replica is None:
+                replica = int(np.argmin(self._pinned_count))
+            if not 0 <= replica < self.num_replicas:
+                raise ValueError(f"replica {replica} out of range "
+                                 f"[0, {self.num_replicas})")
+            self._pinned_count[replica] += 1
+            where = (replica,)
+        for i in where:
+            self.replicas[i].register(model_id, model, params, **kwargs)
+        self._placement[model_id] = where
+        return where
+
+    def placement(self, model_id: str) -> tuple[int, ...]:
+        where = self._placement.get(model_id)
+        if where is None:
+            raise KeyError(f"unknown model_id '{model_id}'; placed: "
+                           f"{list(self._placement)}")
+        return where
+
+    # ------------------------------------------------------------------
+    # Request intake and routing.
+    # ------------------------------------------------------------------
+
+    @property
+    def num_waiting(self) -> int:
+        return sum(e.num_waiting for e in self.replicas)
+
+    def try_submit(self, model_id: str, graph: Graph) -> Optional[int]:
+        """Route one request; returns a global rid or None when every
+        eligible replica's admission controller rejected it."""
+        where = self.placement(model_id)
+        # Shortest-queue-first among eligible replicas; on rejection fall
+        # back to the next shortest (per-replica admission, router-level
+        # failover).  Sort is stable, so equal queues keep placement order.
+        order = sorted(where, key=lambda i: self.replicas[i].num_waiting)
+        for i in order:
+            local = self.replicas[i].try_submit(model_id, graph)
+            if local is not None:
+                rid = self._next_rid
+                self._next_rid += 1
+                self._rid_map[rid] = (i, local)
+                return rid
+        return None
+
+    def submit(self, model_id: str, graph: Graph) -> int:
+        rid = self.try_submit(model_id, graph)
+        if rid is None:
+            raise QueueFullError(
+                f"all {len(self.placement(model_id))} eligible replicas "
+                f"rejected model '{model_id}' (waiting queues full)")
+        return rid
+
+    # ------------------------------------------------------------------
+    # Serving.
+    # ------------------------------------------------------------------
+
+    def step(self) -> int:
+        """One tick on every replica with waiting work; returns total served."""
+        return sum(e.step() for e in self.replicas if e.num_waiting)
+
+    def drain(self) -> int:
+        total = 0
+        while True:
+            served = self.step()
+            if not served:
+                return total
+            total += served
+
+    def run(self, requests) -> ServeReport:
+        """Submit a stream, drain every replica, and build the merged report.
+
+        Mirrors ``GnnServeEngine.run`` closed-loop semantics: when every
+        eligible replica is at its admission bound the router serves ticks
+        until one frees up instead of rejecting.
+        """
+        t0 = time.perf_counter()
+        for item in requests:
+            if isinstance(item, Graph):
+                if len(self._placement) != 1:
+                    raise ValueError(
+                        "bare-graph requests need exactly one placed model; "
+                        f"router holds {list(self._placement)}")
+                model_id, graph = next(iter(self._placement)), item
+            else:
+                model_id, graph = item
+            while True:
+                rid = self.try_submit(model_id, graph)
+                if rid is not None:
+                    break
+                if not self.step():
+                    raise RuntimeError(
+                        "request rejected with no waiting work to drain")
+        self.drain()
+        return self.report(time.perf_counter() - t0)
+
+    def take_result(self, rid: int) -> np.ndarray:
+        """Pop one result by global rid (KeyError if absent/already taken)."""
+        replica, local = self._rid_map.pop(rid)
+        return self.replicas[replica].take_result(local)
+
+    # ------------------------------------------------------------------
+    # Merged accounting.
+    # ------------------------------------------------------------------
+
+    def report(self, wall_s: float) -> ServeReport:
+        records = [r for e in self.replicas for r in e.records]
+        cache = CacheStats()
+        admission = AdmissionStats()
+        per_replica: dict[str, dict] = {}
+        for i, e in enumerate(self.replicas):
+            cache.hits += e.cache.stats.hits
+            cache.misses += e.cache.stats.misses
+            cache.evictions += e.cache.stats.evictions
+            admission.admitted += e.admission.stats.admitted
+            admission.rejected += e.admission.stats.rejected
+            admission.shed += e.admission.stats.shed
+            served: dict[str, int] = {}
+            for r in e.records:
+                served[r.model_id] = served.get(r.model_id, 0) + 1
+            per_replica[f"replica{i}"] = {
+                "served": len(e.records),
+                "per_model": served,
+                "admitted": e.admission.stats.admitted,
+                "rejected": e.admission.stats.rejected,
+                "shed": e.admission.stats.shed,
+                "traces_compiled": e.pool.trace_count,
+                "topology": e.pool.topology(),
+            }
+        first = self.replicas[0]
+        waiting_wait = max((max(
+            (e._tick - dq[0].submit_tick for dq in e._groups.values()),
+            default=0) for e in self.replicas), default=0)
+        dropped_wait = max(e._max_dropped_wait_ticks for e in self.replicas)
+        return build_report(
+            records, wall_s, cache,
+            sum(e.pool.trace_count for e in self.replicas),
+            first.backend,
+            scheduler=first.scheduler.name,
+            admission_stats=admission,
+            queue_max_wait_ticks=max(waiting_wait, dropped_wait),
+            kernel_configs=first.pool.kernel_configs(),
+            topology=first.pool.topology(),
+            replicas=per_replica,
+        )
+
+    def reset_metrics(self) -> None:
+        for e in self.replicas:
+            e.reset_metrics()

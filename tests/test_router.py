@@ -1,0 +1,189 @@
+"""Replica router (serving.router.EngineRouter).
+
+The load-bearing claims:
+  * catalog-aware placement — hot models land on every replica, cold
+    models pin to exactly one (least-loaded, or an explicit pin);
+  * load-aware routing with per-replica admission fallback: a rejection on
+    the shortest queue fails over to the next eligible replica before
+    surfacing;
+  * global rids round-trip through ``take_result`` to the owning replica;
+  * the merged report equals what one engine would say about the union
+    stream, plus per-replica served counts.
+
+No devices beyond the default are needed — replicas are plain engines.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import Graph
+from repro.gnn import build_model
+from repro.serving import EngineRouter, GnnServeEngine, QueueFullError
+
+
+def make_graph(seed, nv=30, ne=100, f=8):
+    rng = np.random.default_rng(seed)
+    return Graph(
+        edge_src=rng.integers(0, nv, ne).astype(np.int32),
+        edge_dst=rng.integers(0, nv, ne).astype(np.int32),
+        node_feat=rng.standard_normal((nv, f)).astype(np.float32),
+    ).validate()
+
+
+def make_model(classes=3, seed=0):
+    model = build_model("gcn", 8, classes, hidden=8)
+    return model, model.init(jax.random.PRNGKey(seed))
+
+
+# ---------------------------------------------------------------------------
+# Placement.
+# ---------------------------------------------------------------------------
+
+
+def test_hot_model_registers_everywhere():
+    model, params = make_model()
+    router = EngineRouter(3, slots=2)
+    assert router.register("m", model, params, hot=True) == (0, 1, 2)
+    for e in router.replicas:
+        assert "m" in e.registry
+
+
+def test_cold_models_balance_across_replicas():
+    model, params = make_model()
+    router = EngineRouter(2, slots=2)
+    homes = [router.register(f"m{i}", model, params) for i in range(4)]
+    assert all(len(h) == 1 for h in homes)
+    # Least-loaded placement alternates 0,1,0,1.
+    assert [h[0] for h in homes] == [0, 1, 0, 1]
+    assert router.placement("m2") == (0,)
+
+
+def test_explicit_pin_and_errors():
+    model, params = make_model()
+    router = EngineRouter(2, slots=2)
+    assert router.register("m", model, params, replica=1) == (1,)
+    with pytest.raises(ValueError, match="already placed"):
+        router.register("m", model, params)
+    with pytest.raises(ValueError, match="replica"):
+        router.register("m2", model, params, hot=True, replica=0)
+    with pytest.raises(ValueError, match="out of range"):
+        router.register("m3", model, params, replica=5)
+    with pytest.raises(KeyError, match="unknown model_id"):
+        router.placement("nope")
+    with pytest.raises(ValueError, match="num_replicas"):
+        EngineRouter(0)
+
+
+# ---------------------------------------------------------------------------
+# Routing + admission fallback.
+# ---------------------------------------------------------------------------
+
+
+def test_routes_to_shortest_queue():
+    model, params = make_model()
+    router = EngineRouter(2, slots=2)
+    router.register("m", model, params, hot=True)
+    g = make_graph(0)
+    router.submit("m", g)
+    router.submit("m", g)
+    # Without serving, two submissions must land on different replicas.
+    assert [e.num_waiting for e in router.replicas] == [1, 1]
+
+
+def test_admission_fallback_across_replicas():
+    model, params = make_model()
+    router = EngineRouter(2, slots=2, max_waiting=1,
+                          admission_policy="reject")
+    router.register("m", model, params, hot=True)
+    g = make_graph(1)
+    assert router.try_submit("m", g) is not None   # shortest queue: A
+    assert router.try_submit("m", g) is not None   # A full -> lands on B
+    assert router.try_submit("m", g) is None       # both full: tried A AND B
+    with pytest.raises(QueueFullError):
+        router.submit("m", g)
+    # The failed attempts rejected on every eligible replica (fallback ran).
+    total_rejected = sum(e.admission.stats.rejected
+                        for e in router.replicas)
+    assert total_rejected >= 2
+    assert router.drain() == 2
+
+
+def test_cold_traffic_stays_on_pinned_replica():
+    model, params = make_model()
+    router = EngineRouter(2, slots=2, max_waiting=1,
+                          admission_policy="reject")
+    home = router.register("cold", model, params)[0]
+    g = make_graph(2)
+    assert router.try_submit("cold", g) is not None
+    # The pinned replica is full and there is no fallback target.
+    assert router.try_submit("cold", g) is None
+    router.drain()
+    other = router.replicas[1 - home]
+    assert not other.records
+
+
+# ---------------------------------------------------------------------------
+# Results + merged report.
+# ---------------------------------------------------------------------------
+
+
+def test_results_round_trip_matches_single_engine():
+    model, params = make_model()
+    graphs = [make_graph(s) for s in range(6)]
+
+    router = EngineRouter(2, slots=2)
+    router.register("m", model, params, hot=True)
+    rids = [router.submit("m", g) for g in graphs]
+    router.drain()
+
+    single = GnnServeEngine(slots=2)
+    single.register("m", model, params)
+    srids = [single.submit("m", g) for g in graphs]
+    single.drain()
+
+    for rid, srid in zip(rids, srids):
+        np.testing.assert_array_equal(router.take_result(rid),
+                                      single.take_result(srid))
+    with pytest.raises(KeyError):
+        router.take_result(rids[0])  # already taken
+
+
+def test_merged_report():
+    hot_model, hot_params = make_model(3, seed=0)
+    cold_model, cold_params = make_model(2, seed=1)
+    router = EngineRouter(2, slots=2)
+    router.register("hot", hot_model, hot_params, hot=True)
+    cold_home = router.register("cold", cold_model, cold_params)[0]
+
+    stream = ([("hot", make_graph(100 + i)) for i in range(6)]
+              + [("cold", make_graph(200 + i)) for i in range(3)])
+    rep = router.run(stream)
+
+    assert rep.requests == 9
+    assert rep.per_model == {"hot": 6, "cold": 3}
+    assert rep.admitted == 9 and rep.rejected == 0
+    assert set(rep.replicas) == {"replica0", "replica1"}
+    assert sum(info["served"] for info in rep.replicas.values()) == 9
+    # Cold traffic shows up only under its pinned replica.
+    for name, info in rep.replicas.items():
+        if name != f"replica{cold_home}":
+            assert "cold" not in info["per_model"]
+    assert rep.traces_compiled == sum(
+        info["traces_compiled"] for info in rep.replicas.values())
+    assert "replicas:" in rep.pretty()
+
+
+def test_router_bare_graph_single_model():
+    model, params = make_model()
+    router = EngineRouter(2, slots=2)
+    router.register("m", model, params, hot=True)
+    rep = router.run([make_graph(7)])
+    assert rep.requests == 1
+
+
+def test_meshes_length_validation():
+    with pytest.raises(ValueError, match="meshes"):
+        EngineRouter(2, meshes=[None])
+    with pytest.raises(ValueError, match="not both"):
+        EngineRouter(1, meshes=[None], mesh=None)

@@ -1,0 +1,336 @@
+"""Multi-device sharded fused forward (core.aggregate sharded execution).
+
+The load-bearing claims:
+  * ``shard_blocked`` partitions the CSR-sorted tile list owner-exclusively
+    (contiguous destination slices, per-shard CSR sortedness, inert padding
+    tiles);
+  * the destination-block strategy is BIT-EXACT vs the single-device
+    blocked forward on every backend and reduce mode — including the fused
+    quantized epilogue, whose int8 activation scales are per-row-block and
+    therefore shard cleanly;
+  * the feature-dim strategy matches to documented few-ULP tolerance
+    (psum association order) and routes transparently through
+    ``shard_scope`` — including inside vmapped serving executors — while
+    quantized sites are left single-device (per-tensor int8 scale is a
+    global reduction);
+  * strategy planning (``plan_shard_strategy``) and the engine-level mesh
+    topology surface behave as documented.
+
+Device-mesh tests need >= 8 visible devices — on CPU hosts run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the CI shard-smoke
+job does).  Host-side prep tests run everywhere.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    Graph,
+    ReduceOp,
+    ShardedBlockedGraph,
+    aggregate_backend,
+    aggregate_combine_blocked,
+    aggregate_combine_sharded,
+    kernel_config_scope,
+    partition_graph,
+    plan_shard_strategy,
+    shard_blocked,
+    shard_scope,
+    to_blocked,
+)
+from repro.core.aggregate import active_shard_context
+from repro.kernels.autotune import KernelConfig
+from repro.launch.mesh import make_data_mesh
+
+needs_devices = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs 8 devices "
+           "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+
+def make_graph(seed, nv=70, ne=320, f=12):
+    rng = np.random.default_rng(seed)
+    return Graph(
+        edge_src=rng.integers(0, nv, ne).astype(np.int32),
+        edge_dst=rng.integers(0, nv, ne).astype(np.int32),
+        node_feat=rng.standard_normal((nv, f)).astype(np.float32),
+    ).validate()
+
+
+def blocked_fixture(seed=0, nv=70, ne=320, f=12, v=8, n=8):
+    g = make_graph(seed, nv, ne, f)
+    pg = partition_graph(g, v=v, n=n)
+    bg = to_blocked(pg)
+    feat = jnp.asarray(pg.pad_features(g.node_feat))
+    return bg, feat
+
+
+def make_weights(f_in, f_out, seed=1):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.standard_normal((f_in, f_out)).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal((f_out,)).astype(np.float32))
+    return w, b
+
+
+# ---------------------------------------------------------------------------
+# Host-side prep (shard_blocked): no devices needed.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("num_shards", [1, 2, 3, 4])
+def test_shard_blocked_geometry(num_shards):
+    bg, _ = blocked_fixture()
+    sbg = shard_blocked(bg, num_shards)
+    assert isinstance(sbg, ShardedBlockedGraph)
+    assert sbg.num_shards == num_shards
+    assert sbg.blocks.shape[0] == num_shards
+    local = sbg.local_dst_groups
+    assert local * num_shards >= bg.num_dst_groups
+    assert sbg.num_blocks == int(bg.blocks.shape[0])
+
+    row_g = np.asarray(bg.block_row)
+    sr = np.asarray(sbg.block_row)
+    sc = np.asarray(sbg.block_col)
+    sb = np.asarray(sbg.blocks)
+    total_real = 0
+    for d in range(num_shards):
+        # Per-shard CSR sortedness (the Pallas kernels' precondition).
+        assert (np.diff(sr[d]) >= 0).all()
+        assert (0 <= sr[d]).all() and (sr[d] < local).all()
+        assert (0 <= sc[d]).all() and (sc[d] < bg.num_src_groups).all()
+        # Real tiles carry exactly the global tiles this owner holds.
+        owner = np.minimum(row_g // local, num_shards - 1)
+        k = int((owner == d).sum())
+        total_real += k
+        np.testing.assert_array_equal(
+            sr[d, :k], row_g[owner == d] - d * local)
+        # Padding tiles are all-zero (numerically inert).
+        assert not sb[d, k:].any()
+    assert total_real == sbg.num_blocks
+    # Degrees cover the global groups and pad with zeros.
+    assert sbg.deg.shape == (num_shards, local * bg.v)
+
+
+def test_shard_blocked_tile_cap():
+    bg, _ = blocked_fixture()
+    sbg = shard_blocked(bg, 2)
+    bigger = shard_blocked(bg, 2, tile_cap=sbg.tile_cap + 3)
+    assert bigger.tile_cap == sbg.tile_cap + 3
+    with pytest.raises(ValueError, match="tile_cap"):
+        shard_blocked(bg, 2, tile_cap=max(sbg.tile_cap - 1, 0))
+    with pytest.raises(ValueError, match="num_shards"):
+        shard_blocked(bg, 0)
+
+
+def test_plan_shard_strategy():
+    # No prepped graph -> feature (needs no resharding, pays a psum).
+    plan = plan_shard_strategy(6, 8, 16, 4)
+    assert plan.strategy == "feature"
+    assert plan.psum_bytes == 6 * 8 * 16 * 4 * 3
+    assert not plan.bit_exact
+    # Prepped graph -> dst_block: no collective, bit-exact.
+    plan = plan_shard_strategy(6, 8, 16, 4, sharded_graph=True)
+    assert plan.strategy == "dst_block"
+    assert plan.psum_bytes == 0 and plan.bit_exact
+    # Quantized stages only shard destination-wise.
+    plan = plan_shard_strategy(6, 8, 16, 4, quantized=True)
+    assert plan.strategy == "dst_block"
+    assert not plan.bit_exact  # int8 epilogue exactness is backend-specific
+    with pytest.raises(ValueError, match="quantized"):
+        plan_shard_strategy(6, 8, 16, 4, quantized=True, strategy="feature")
+    with pytest.raises(ValueError, match="unknown shard strategy"):
+        plan_shard_strategy(6, 8, 16, 4, strategy="rows")
+
+
+def test_shard_scope_stack():
+    assert active_shard_context() is None
+    mesh = object.__new__(object)  # never consulted below
+
+    class StubMesh:
+        axis_names = ("data",)
+        shape = {"data": 2}
+
+    mesh = StubMesh()
+    with shard_scope(mesh):
+        ctx = active_shard_context()
+        assert ctx is not None and ctx.num_shards == 2
+        with shard_scope(None):       # suppression for nested lowerings
+            assert active_shard_context() is None
+        assert active_shard_context() is ctx
+    assert active_shard_context() is None
+    with pytest.raises(ValueError, match="axis"):
+        with shard_scope(mesh, "model"):
+            pass
+
+
+# ---------------------------------------------------------------------------
+# Destination-block strategy: bit-exact on an 8-device host mesh.
+# ---------------------------------------------------------------------------
+
+
+@needs_devices
+@pytest.mark.parametrize("backend", ["jnp", "pallas", "pallas_fused"])
+@pytest.mark.parametrize("reduce", [ReduceOp.SUM, ReduceOp.MEAN, ReduceOp.MAX])
+def test_dst_block_bit_exact(backend, reduce):
+    bg, feat = blocked_fixture()
+    w, b = make_weights(feat.shape[-1], 16)
+    mesh = make_data_mesh(4)
+    sbg = shard_blocked(bg, 4)
+    with aggregate_backend(backend):
+        ref = aggregate_combine_blocked(bg, feat, w, b, reduce=reduce,
+                                        activation="relu")
+        got = aggregate_combine_sharded(sbg, feat, w, b, mesh=mesh,
+                                        reduce=reduce, activation="relu")
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(got))
+
+
+@needs_devices
+def test_dst_block_quantized_fused_bit_exact():
+    """The fused int8 epilogue's activation scales are per destination
+    row-block, so the owner partition reproduces them exactly."""
+    bg, feat = blocked_fixture(seed=5)
+    w, b = make_weights(feat.shape[-1], 8, seed=6)
+    mesh = make_data_mesh(4)
+    sbg = shard_blocked(bg, 4)
+    with aggregate_backend("pallas_fused"):
+        ref = aggregate_combine_blocked(bg, feat, w, b, quantized=True)
+        got = aggregate_combine_sharded(sbg, feat, w, b, mesh=mesh,
+                                        quantized=True)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(got))
+
+
+@needs_devices
+def test_dst_block_order_resolved_globally():
+    """Wide-in/narrow-out geometry favors combine-first globally; the
+    sharded forward must lower the same order on every device (a per-shard
+    plan could flip it) and still match bit-exactly."""
+    bg, feat = blocked_fixture(f=64)
+    w, b = make_weights(64, 2)
+    mesh = make_data_mesh(8)
+    sbg = shard_blocked(bg, 8)
+    ref = aggregate_combine_blocked(bg, feat, w, b, order="auto")
+    got = aggregate_combine_sharded(sbg, feat, w, b, mesh=mesh, order="auto")
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(got))
+
+
+@needs_devices
+def test_sharded_api_errors():
+    bg, feat = blocked_fixture()
+    w, _ = make_weights(feat.shape[-1], 4)
+    mesh = make_data_mesh(4)
+    sbg = shard_blocked(bg, 4)
+    with pytest.raises(ValueError, match="plain BlockedGraph"):
+        aggregate_combine_sharded(sbg, feat, w, mesh=mesh,
+                                  strategy="feature")
+    with pytest.raises(ValueError, match="ShardedBlockedGraph"):
+        aggregate_combine_sharded(bg, feat, w, mesh=mesh,
+                                  strategy="dst_block")
+    with pytest.raises(ValueError, match="mesh"):
+        aggregate_combine_sharded(shard_blocked(bg, 2), feat, w, mesh=mesh)
+
+
+# ---------------------------------------------------------------------------
+# Feature-dim strategy: few-ULP tolerance, shard_scope routing.
+# ---------------------------------------------------------------------------
+
+
+@needs_devices
+@pytest.mark.parametrize("reduce", [ReduceOp.SUM, ReduceOp.MEAN, ReduceOp.MAX])
+def test_feature_strategy_tolerance(reduce):
+    bg, feat = blocked_fixture()
+    w, b = make_weights(feat.shape[-1], 16)
+    mesh = make_data_mesh(8)
+    ref = aggregate_combine_blocked(bg, feat, w, b, reduce=reduce,
+                                    activation="relu")
+    got = aggregate_combine_sharded(bg, feat, w, b, mesh=mesh,
+                                    reduce=reduce, activation="relu")
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(got),
+                               rtol=0, atol=1e-5)
+
+
+@needs_devices
+def test_feature_strategy_f_in_not_divisible():
+    """F_in=12 over 8 devices: zero-padded columns/rows are exact no-ops."""
+    bg, feat = blocked_fixture(f=12)
+    assert feat.shape[-1] % 8 != 0
+    w, b = make_weights(12, 8)
+    mesh = make_data_mesh(8)
+    ref = aggregate_combine_blocked(bg, feat, w, b)
+    got = aggregate_combine_sharded(bg, feat, w, b, mesh=mesh)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(got),
+                               rtol=0, atol=1e-5)
+
+
+@needs_devices
+def test_shard_scope_routes_and_quantized_stays_single_device():
+    bg, feat = blocked_fixture()
+    w, b = make_weights(feat.shape[-1], 16)
+    mesh = make_data_mesh(4)
+    ref = aggregate_combine_blocked(bg, feat, w, b)
+    with shard_scope(mesh):
+        got = aggregate_combine_blocked(bg, feat, w, b)
+        # Quantized sites must bypass the feature router entirely: their
+        # output is bit-identical to the unsharded quantized forward.
+        q_ref = None
+        with shard_scope(None):
+            q_ref = aggregate_combine_blocked(bg, feat, w, b, quantized=True)
+        q_got = aggregate_combine_blocked(bg, feat, w, b, quantized=True)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(got),
+                               rtol=0, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(q_ref), np.asarray(q_got))
+
+
+@needs_devices
+def test_kernel_config_shard_none_vetoes_routing():
+    bg, feat = blocked_fixture()
+    w, _ = make_weights(feat.shape[-1], 16)
+    ref = aggregate_combine_blocked(bg, feat, w)
+    cfg = KernelConfig(shard="none")
+    with shard_scope(make_data_mesh(4)), kernel_config_scope(lambda s: cfg):
+        got = aggregate_combine_blocked(bg, feat, w)
+    # Bit-identical: the veto keeps the site on the single-device lowering.
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(got))
+
+
+# ---------------------------------------------------------------------------
+# Engine integration: mesh-backed executor pool.
+# ---------------------------------------------------------------------------
+
+
+@needs_devices
+def test_mesh_engine_matches_meshless():
+    from repro.gnn import build_model
+    from repro.serving import GnnServeEngine, gcn_prepare
+
+    model = build_model("gcn", 12, 3, hidden=16)
+    params = model.init(jax.random.PRNGKey(0))
+    graphs = [make_graph(s, nv=40, ne=150) for s in range(5)]
+
+    def serve(mesh):
+        eng = GnnServeEngine(slots=4, mesh=mesh)
+        eng.register("m", model, params, prepare_fn=gcn_prepare)
+        rids = [eng.submit("m", g) for g in graphs]
+        eng.drain()
+        return eng, [eng.take_result(r) for r in rids]
+
+    eng0, ref = serve(None)
+    eng1, got = serve(make_data_mesh(4))
+    for a, b in zip(ref, got):
+        np.testing.assert_allclose(a, b, rtol=0, atol=1e-5)
+    rep0, rep1 = eng0.report(1.0), eng1.report(1.0)
+    assert rep0.topology == {}
+    assert rep1.topology["num_devices"] == 4
+    assert rep1.topology["mesh_shape"] == {"data": 4}
+    assert rep1.topology["strategy"] == "feature"
+    assert "mesh: 4 devices" in rep1.pretty()
+
+
+@needs_devices
+def test_executor_pool_mesh_validation():
+    from repro.serving import ExecutorPool
+
+    with pytest.raises(ValueError, match="axis"):
+        ExecutorPool(slots=2, backend="jnp", mesh=make_data_mesh(2),
+                     shard_axis="model")

@@ -1,0 +1,140 @@
+"""Sharding spec helpers (distributed.sharding).
+
+Rule-engine unit coverage plus the graph-aware specs this repo's serving
+path uses.  Divisibility/spec tests run against a duck-typed stub mesh
+(only ``mesh.shape`` is consulted), so they need no devices;
+``NamedSharding``-producing helpers use a real 1-device mesh.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core import Graph, partition_graph, shard_blocked, to_blocked
+from repro.distributed.sharding import (
+    _fits,
+    auto_shard_params,
+    blocked_graph_shardings,
+    blocked_graph_specs,
+    estimate_bytes_per_device,
+    estimate_graph_bytes_per_device,
+    spec_for_param,
+)
+from repro.launch.mesh import make_data_mesh
+
+
+class StubMesh:
+    """Duck-typed mesh: the rule engine only reads ``shape``."""
+
+    def __init__(self, **shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+MESH = StubMesh(data=4, model=8)
+
+
+def test_fits_edge_cases():
+    assert _fits(32, MESH, "model")
+    assert not _fits(12, MESH, "model")
+    assert _fits(12, MESH, "data")
+    # None axes -> size 1 -> everything fits (replication).
+    assert _fits(7, MESH, None)
+    # Tuple axes multiply.
+    assert _fits(64, MESH, ("data", "model"))
+    assert not _fits(16, MESH, ("data", "model"))
+    assert _fits(0, MESH, "model")  # degenerate dim divides everything
+
+
+def test_spec_for_param_tp_dims():
+    spec, fb = spec_for_param("layers/attn/wq", (64, 32), MESH,
+                              "data", "model")
+    assert spec == P("data", "model") and not fb
+    spec, fb = spec_for_param("layers/attn/wo", (32, 64), MESH,
+                              "data", "model")
+    assert spec == P("model", "data") and not fb
+    # Non-divisible TP dim falls back to replication on that dim (recorded).
+    spec, fb = spec_for_param("layers/attn/wq", (64, 12), MESH,
+                              "data", "model")
+    assert spec == P("data", None) and fb
+
+
+def test_spec_for_param_generic_and_small():
+    # Generic matrix: FSDP the larger dim, TP the smaller.
+    spec, fb = spec_for_param("gcn/w1", (64, 32), MESH, "data", "model")
+    assert spec == P("data", "model") and not fb
+    # Small vectors and scalars replicate.
+    assert spec_for_param("gcn/b1", (3,), MESH, "data", "model") == (P(), False)
+    assert spec_for_param("eps", (), MESH, "data", "model") == (P(), False)
+    # Long vectors get FSDP.
+    spec, _ = spec_for_param("embed_bias", (2048,), MESH, "data", "model")
+    assert spec == P("data")
+
+
+def test_auto_shard_gnn_param_tree():
+    """A GNN-shaped param tree flows through the generic rules: weight
+    matrices shard, biases replicate, and every leaf gets a sharding."""
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    params = {
+        "layer0": {"w": jnp.zeros((16, 32)), "b": jnp.zeros((32,))},
+        "layer1": {"w": jnp.zeros((32, 3)), "b": jnp.zeros((3,))},
+    }
+    plan = auto_shard_params(params, mesh)
+    assert set(plan.shardings) == {"layer0/w", "layer0/b",
+                                   "layer1/w", "layer1/b"}
+    assert plan.shardings["layer0/b"].spec == P()
+    # On a 1-device mesh everything divides; bytes = full tree size.
+    total = estimate_bytes_per_device(params, plan, mesh)
+    assert total == sum(int(np.prod(l.shape)) * 4
+                        for l in jax.tree.leaves(params))
+
+
+def _blocked(seed=0, nv=50, ne=200, f=8, v=8, n=8):
+    rng = np.random.default_rng(seed)
+    g = Graph(
+        edge_src=rng.integers(0, nv, ne).astype(np.int32),
+        edge_dst=rng.integers(0, nv, ne).astype(np.int32),
+        node_feat=rng.standard_normal((nv, f)).astype(np.float32),
+    ).validate()
+    return to_blocked(partition_graph(g, v=v, n=n))
+
+
+def test_blocked_graph_specs():
+    bg = _blocked()
+    specs = blocked_graph_specs(bg)
+    # Plain graphs replicate; to_blocked materializes deg eagerly.
+    assert specs == {"blocks": P(), "block_row": P(), "block_col": P(),
+                     "deg": P()}
+    # deg only appears once materialized.
+    assert "deg" not in blocked_graph_specs(bg._replace(deg=None))
+    sbg = shard_blocked(bg, 2)
+    specs = blocked_graph_specs(sbg, axis="data")
+    assert specs == {"blocks": P("data"), "block_row": P("data"),
+                     "block_col": P("data"), "deg": P("data")}
+    with pytest.raises(TypeError, match="BlockedGraph"):
+        blocked_graph_specs({"not": "a graph"})
+
+
+def test_blocked_graph_shardings_real_mesh():
+    mesh = make_data_mesh(1)
+    sbg = shard_blocked(_blocked(), 1)
+    shardings = blocked_graph_shardings(sbg, mesh)
+    assert set(shardings) == {"blocks", "block_row", "block_col", "deg"}
+    for s in shardings.values():
+        assert s.mesh is mesh
+
+
+def test_estimate_graph_bytes_per_device():
+    bg = _blocked()
+    sbg = shard_blocked(bg, 4)
+    full = estimate_graph_bytes_per_device(sbg, 1)
+    quarter = estimate_graph_bytes_per_device(sbg, 4)
+    assert quarter == pytest.approx(full / 4)
+    # A plain BlockedGraph replicates wholesale regardless of shard count.
+    rep = estimate_graph_bytes_per_device(bg, 1)
+    assert estimate_graph_bytes_per_device(bg, 4) == rep
+    assert rep > 0
+    with pytest.raises(ValueError, match="num_shards"):
+        estimate_graph_bytes_per_device(bg, 0)
