@@ -53,7 +53,7 @@ from repro.core import (
 from repro.gnn import build_model
 from repro.launch.mesh import make_data_mesh
 from repro.photonic.perf import GhostConfig, GnnModelSpec
-from repro.serving import EngineRouter, GnnServeEngine
+from repro.serving import EngineRouter, GnnServeEngine, HostGraph
 
 
 def _graph_pool(count: int, f: int, seed: int) -> list[Graph]:
@@ -385,6 +385,93 @@ def run_router(requests: int, working_set: int, slots: int,
     })
 
 
+# ---------------------------------------------------------------------------
+# Node queries against one large resident HostGraph: the million-node intake
+# path.  Per graph size, a skewed (Zipf hot-node) single-seed query stream is
+# served open-loop through submit_nodes — each query samples its k-hop
+# neighborhood, and hot nodes resample *identical* subgraphs (deterministic
+# per-vertex rng), so the partition cache collapses them onto one entry.
+# The sweep records queries/s + p99 vs graph size and the subgraph-level
+# cache hit counts that make node-query serving viable at all.
+# ---------------------------------------------------------------------------
+
+
+def run_node_queries(sizes=(10_000, 100_000, 1_000_000), queries: int = 48,
+                     slots: int = 8, fanouts=(8, 4), avg_degree: int = 6,
+                     zipf: float = 1.1, f: int = 16, hidden: int = 16) -> dict:
+    model = build_model("sage", f, 3, hidden=hidden)
+    params = model.init(jax.random.PRNGKey(5))
+    cfg = GhostConfig()
+    fan_desc = "x".join("full" if x is None else str(x) for x in fanouts)
+
+    sweep = {}
+    for nv in sizes:
+        host = HostGraph.synthetic_power_law(
+            int(nv), avg_degree=avg_degree, num_features=f, seed=13)
+        engine = GnnServeEngine(cfg=cfg, slots=slots)
+        engine.register("sage", model, params, task="node")
+        engine.register_host_graph("hg", host, fanouts=fanouts, rng_seed=0)
+
+        # Skewed hot-node stream: queries Zipf-concentrate on a hot set, so
+        # repeated seeds exercise the subgraph-level partition cache.
+        rng = np.random.default_rng(17)
+        hot_size = min(int(nv), 10_000)
+        p = np.arange(1, hot_size + 1, dtype=np.float64) ** (-zipf)
+        p /= p.sum()
+        hot_nodes = rng.permutation(int(nv))[:hot_size]
+        seeds = hot_nodes[rng.choice(hot_size, size=queries, p=p)]
+
+        # Warm-up: compile the executor traces for the buckets this fanout
+        # policy lands in, then measure steady state.
+        for s in seeds[: min(slots, queries)]:
+            engine.submit_nodes("sage", [int(s)])
+        engine.drain()
+        engine.reset_metrics()
+
+        t0 = time.perf_counter()
+        for i, s in enumerate(seeds):
+            engine.submit_nodes("sage", [int(s)])
+            if (i + 1) % slots == 0:
+                engine.step()
+        engine.drain()
+        report = engine.report(time.perf_counter() - t0)
+
+        nq = report.node_query_stats
+        sweep[str(int(nv))] = {
+            "nodes": int(nv),
+            "edges": host.num_edges,
+            "req_per_s": report.req_per_s,
+            "p50_latency_ms": report.p50_latency_ms,
+            "p99_latency_ms": report.p99_latency_ms,
+            "cache_hits": report.cache_hits,
+            "cache_hit_rate": report.cache_hit_rate,
+            "sample_p50_ms": nq.get("sample_p50_ms", 0.0),
+            "sample_p99_ms": nq.get("sample_p99_ms", 0.0),
+            "mean_sampled_nodes": nq.get("mean_sampled_nodes", 0.0),
+            "mean_sampled_edges": nq.get("mean_sampled_edges", 0.0),
+            "traces_compiled": report.traces_compiled,
+        }
+        emit(f"serving/node_queries_{int(nv)}",
+             0.0 if not report.req_per_s else 1e6 / report.req_per_s,
+             f"q_s={report.req_per_s:.1f};"
+             f"p99={report.p99_latency_ms:.1f}ms;"
+             f"hits={report.cache_hits}")
+    return bench_json({
+        "bench": "serving_node_queries",
+        "queries": queries,
+        "slots": slots,
+        "fanouts": fan_desc,
+        "avg_degree": avg_degree,
+        "zipf": zipf,
+        "sizes": [int(s) for s in sizes],
+        "sweep": sweep,
+        "note": "open-loop single-seed node queries against one resident "
+                "HostGraph; hot-node Zipf stream -> deterministic resamples "
+                "share partition-cache entries (cache_hits are "
+                "subgraph-level)",
+    })
+
+
 def run(quick: bool = True, requests: int | None = None,
         working_set: int = 10, slots: int = 8, backend: str = "jnp",
         include_naive: bool = True, include_mixed: bool = True,
@@ -477,11 +564,19 @@ def main():
                     help="replica count for --router")
     ap.add_argument("--counts", type=str, default="1,2,4,8",
                     help="comma-separated device counts for --device-scaling")
+    ap.add_argument("--node-queries", action="store_true",
+                    help="run ONLY the node-query (neighborhood-sampled) "
+                         "sweep vs resident graph size")
+    ap.add_argument("--sizes", type=str, default="10000,100000,1000000",
+                    help="comma-separated host graph sizes for "
+                         "--node-queries")
+    ap.add_argument("--queries", type=int, default=None,
+                    help="query count per size for --node-queries")
     args = ap.parse_args()
     if args.working_set < 1 or args.slots < 1 or (
             args.requests is not None and args.requests < 1):
         ap.error("--requests, --working-set and --slots must be >= 1")
-    if args.device_scaling or args.router:
+    if args.device_scaling or args.router or args.node_queries:
         requests = args.requests or (16 if not args.full else 128)
         if args.device_scaling:
             counts = tuple(int(c) for c in args.counts.split(","))
@@ -490,6 +585,12 @@ def main():
         if args.router:
             run_router(requests, min(args.working_set, 6), args.slots,
                        replicas=args.replicas)
+        if args.node_queries:
+            sizes = tuple(int(s) for s in args.sizes.split(","))
+            run_node_queries(sizes=sizes,
+                             queries=args.queries
+                             or (48 if not args.full else 192),
+                             slots=args.slots)
         return
     run(quick=not args.full, requests=args.requests,
         working_set=args.working_set, slots=args.slots,

@@ -69,9 +69,14 @@ class Graph:
         GCN-style aggregation includes the vertex itself (h_v in the paper's
         reduce output h_v + sum_u h_u).
         """
-        loops = np.arange(self.num_nodes, dtype=np.int32)
-        have = set(zip(self.edge_src.tolist(), self.edge_dst.tolist()))
-        keep = np.array([i for i in loops if (i, i) not in have], dtype=np.int32)
+        # Vectorized membership: a vertex needs a loop added iff no existing
+        # edge is already (i, i).  Appended loop order (ascending vertex id)
+        # matches the old python-set scan exactly, so partitions — and
+        # therefore content-hash cache keys — are unchanged.
+        has_loop = np.zeros(self.num_nodes, dtype=bool)
+        self_edges = self.edge_src == self.edge_dst
+        has_loop[self.edge_dst[self_edges]] = True
+        keep = np.flatnonzero(~has_loop).astype(np.int32)
         return dataclasses.replace(
             self,
             edge_src=np.concatenate([self.edge_src, keep]),

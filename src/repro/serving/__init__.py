@@ -22,9 +22,21 @@ from repro.serving.cache import (
     graph_content_hash,
 )
 from repro.serving.engine import GnnServeEngine, QueueFullError, gcn_prepare
-from repro.serving.registry import ExecutorPool, ModelEntry, ModelRegistry
+from repro.serving.registry import (
+    ExecutorPool,
+    HostGraphCatalog,
+    HostGraphEntry,
+    ModelEntry,
+    ModelRegistry,
+)
 from repro.serving.router import EngineRouter
 from repro.serving.report import RequestRecord, ServeReport, build_report
+from repro.serving.sampler import (
+    HostGraph,
+    SampleResult,
+    gcn_sample_prepare,
+    sample_khop,
+)
 from repro.serving.scheduler import (
     SCHEDULERS,
     FifoScheduler,

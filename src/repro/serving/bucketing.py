@@ -126,7 +126,16 @@ def pad_features_to_bucket(
         raise ValueError("feature matrix larger than bucket source rows")
     if feat.shape[1] > bucket.f:
         raise ValueError("feature dim larger than bucket feature dim")
-    out = np.zeros((rows, bucket.f), np.float32)
+    dtype = np.dtype(feat.dtype)
+    if dtype.kind != "f":
+        # Integer/bool features would previously be *up*cast to f32 here
+        # silently; refuse instead so the caller converts deliberately.
+        raise TypeError(
+            f"pad_features_to_bucket requires floating features, got {dtype}")
+    # Preserve the request dtype: allocating f32 unconditionally would
+    # silently downcast float64 (or future bf16) features before they ever
+    # reach the executor.
+    out = np.zeros((rows, bucket.f), dtype)
     out[: feat.shape[0], : feat.shape[1]] = feat
     return out
 

@@ -36,22 +36,35 @@ def graph_content_hash(
     n: int,
     edge_weights: Optional[np.ndarray] = None,
     salt: str = "",
+    extra: bytes = b"",
 ) -> str:
     """Hash the partitioner's inputs: structure + group sizes (+ weights).
 
     ``salt`` distinguishes deterministic structure transforms (e.g. GCN
     self-loops + symmetric normalization) applied on cache miss, so the raw
     graph can be hashed without re-running the transform on every request.
+    ``extra`` is opaque caller context that the transform closes over (the
+    sampled-serving path hashes the host-node ids here: two samples with
+    identical local structure but different host vertices get different
+    host-degree GCN weights, so they must not share a partition).
+
+    Edge weights hash as their *original* dtype's bytes plus a dtype tag:
+    downcasting to one common dtype before hashing would collide weightings
+    that differ only beyond that dtype's precision (e.g. two float64
+    vectors 1e-12 apart) onto one cache key, silently sharing a partition.
     """
     h = hashlib.sha1()
     h.update(salt.encode())
+    h.update(extra)
     h.update(np.int64(graph.num_nodes).tobytes())
     h.update(np.int64(v).tobytes())
     h.update(np.int64(n).tobytes())
     h.update(np.ascontiguousarray(graph.edge_src, dtype=np.int32).tobytes())
     h.update(np.ascontiguousarray(graph.edge_dst, dtype=np.int32).tobytes())
     if edge_weights is not None:
-        h.update(np.ascontiguousarray(edge_weights, dtype=np.float32).tobytes())
+        w = np.ascontiguousarray(edge_weights)
+        h.update(str(w.dtype).encode())
+        h.update(w.tobytes())
     return h.hexdigest()
 
 
@@ -87,6 +100,21 @@ class PreprocessCache:
     def __len__(self) -> int:
         return len(self._entries)
 
+    def peek(self, key: str, touch: bool = True) -> Optional[CacheEntry]:
+        """Look up an entry by key without counting a hit or miss.
+
+        For consumers on the *serve* path (per-slot hardware accounting,
+        report assembly) that revisit an entry created at submit time:
+        ``touch=True`` (default) refreshes LRU recency, so a structure
+        that is served often but submitted rarely stays resident.  Stats
+        are untouched either way — hit/miss rates measure submit-path
+        memoization only.
+        """
+        entry = self._entries.get(key)
+        if entry is not None and touch:
+            self._entries.move_to_end(key)
+        return entry
+
     def get_or_partition(
         self,
         graph: Graph,
@@ -95,16 +123,19 @@ class PreprocessCache:
         edge_weights: Optional[np.ndarray] = None,
         transform=None,
         salt: str = "",
+        extra: bytes = b"",
     ) -> tuple[CacheEntry, bool]:
         """Return (entry, was_hit); partitions and inserts on miss.
 
         ``transform``, if given, maps the raw graph to
         ``(graph, edge_weights)`` on miss only (its identity must be encoded
         in ``salt`` so distinct transforms don't collide on the same raw
-        structure).  The transformed graph is kept on the entry for
-        consumers that model the executed (not the submitted) structure.
+        structure; any other context it closes over — e.g. the sampled
+        host-node ids — goes in ``extra``).  The transformed graph is kept
+        on the entry for consumers that model the executed (not the
+        submitted) structure.
         """
-        key = graph_content_hash(graph, v, n, edge_weights, salt)
+        key = graph_content_hash(graph, v, n, edge_weights, salt, extra)
         entry = self._entries.get(key)
         if entry is not None:
             self.stats.hits += 1

@@ -44,9 +44,10 @@ negative latencies.
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from collections import OrderedDict, deque
-from typing import Optional
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -63,8 +64,15 @@ from repro.serving.bucketing import (
     pad_partition_to_bucket,
 )
 from repro.serving.cache import CacheStats, PreprocessCache
-from repro.serving.registry import ExecutorPool, ModelEntry, ModelRegistry
+from repro.serving.registry import (
+    ExecutorPool,
+    HostGraphCatalog,
+    HostGraphEntry,
+    ModelEntry,
+    ModelRegistry,
+)
 from repro.serving.report import RequestRecord, ServeReport, build_report
+from repro.serving.sampler import HostGraph, gcn_sample_prepare, sample_khop
 from repro.serving.scheduler import GroupState, make_scheduler
 
 
@@ -93,6 +101,13 @@ class _Pending:
     t_submit: float         # perf_counter at submission
     seq: int                # global submission order (FIFO age)
     submit_tick: int        # engine tick at submission (starvation age)
+    # Node-query (neighborhood-sampled) requests only:
+    seed_rows: Optional[np.ndarray] = None  # local rows to slice results to
+    num_seeds: int = 0
+    sample_s: float = 0.0
+    sampled_nodes: int = 0  # real (non-ghost) vertices in the subgraph
+    sampled_edges: int = 0
+    fanouts_desc: str = ""
 
 
 class GnnServeEngine:
@@ -156,6 +171,7 @@ class GnnServeEngine:
         self.slots = slots
         self.backend = backend
         self.registry = ModelRegistry()
+        self.hosts = HostGraphCatalog()
         self.pool = ExecutorPool(slots=slots, backend=backend,  # validates
                                  tuner=tuner, kernel_config=kernel_config,
                                  mesh=mesh, shard_axis=shard_axis)
@@ -176,8 +192,30 @@ class GnnServeEngine:
     # ------------------------------------------------------------------
 
     def register(self, model_id: str, model, params, **kwargs) -> ModelEntry:
-        """Add one model to the catalog (see ModelRegistry.register)."""
+        """Add one model to the catalog (see ModelRegistry.register).
+
+        The engine fills in the sampled-serving counterpart of the standard
+        GCN prepare automatically: a model registered with
+        ``prepare_fn=gcn_prepare`` gets ``gcn_sample_prepare`` (host-degree
+        normalization) unless the caller supplies their own.
+        """
+        if (kwargs.get("prepare_fn") is gcn_prepare
+                and kwargs.get("sample_prepare_fn") is None):
+            kwargs["sample_prepare_fn"] = gcn_sample_prepare
         return self.registry.register(model_id, model, params, **kwargs)
+
+    def register_host_graph(self, name: str, host: HostGraph, *,
+                            fanouts: Sequence[Optional[int]] = (10, 10),
+                            rng_seed: int = 0) -> HostGraphEntry:
+        """Register one resident graph for node-query serving.
+
+        ``fanouts`` is the default per-layer sampling budget (len = hop
+        count, ``None`` entries = take the full neighborhood); ``rng_seed``
+        fixes the deterministic sampling policy, which is what lets hot
+        query nodes share partition-cache entries.
+        """
+        return self.hosts.register(name, host, fanouts=fanouts,
+                                   rng_seed=rng_seed)
 
     # ------------------------------------------------------------------
     # Request intake.
@@ -202,10 +240,18 @@ class GnnServeEngine:
         if verdict == "reject":
             return None
         t0 = time.perf_counter()
+        return self._enqueue(model_id, graph, verdict, t0,
+                             transform=entry_m.prepare_fn,
+                             salt=entry_m.salt)
+
+    def _enqueue(self, model_id: str, graph: Graph, verdict: str, t0: float,
+                 *, transform, salt: str, extra: bytes = b"",
+                 nq: Optional[dict] = None) -> int:
+        """Preprocess (cached) and enqueue one admitted request."""
         try:
             centry, hit = self.cache.get_or_partition(
                 graph, self.cfg.v, self.cfg.n,
-                transform=entry_m.prepare_fn, salt=entry_m.salt)
+                transform=transform, salt=salt, extra=extra)
             pg = centry.pg
             shape = centry.extras.get("shape")
             if shape is None:
@@ -214,7 +260,8 @@ class GnnServeEngine:
                 # derive the request's full bucket from its feature width.
                 shape = centry.extras["shape"] = bucket_for(pg)
                 centry.extras["padded"] = pad_partition_to_bucket(pg, shape)
-            bucket = dataclasses.replace(shape, f=next_pow2(f))
+            bucket = dataclasses.replace(
+                shape, f=next_pow2(graph.node_feat.shape[1]))
             blocks, row, col = centry.extras["padded"]
             feat = pad_features_to_bucket(pg, bucket, graph.node_feat)
         except Exception:
@@ -243,6 +290,7 @@ class GnnServeEngine:
             t_submit=t0,
             seq=self._seq,
             submit_tick=self._tick,
+            **(nq or {}),
         )
         self._seq += 1
         self._groups.setdefault((model_id, bucket), deque()).append(pending)
@@ -251,6 +299,100 @@ class GnnServeEngine:
     def submit(self, model_id: str, graph: Graph) -> int:
         """Like try_submit, but raises QueueFullError on rejection."""
         rid = self.try_submit(model_id, graph)
+        if rid is None:
+            raise QueueFullError(
+                f"waiting queue full ({self.admission.max_waiting}) and "
+                f"admission policy is '{self.admission.policy}'")
+        return rid
+
+    def try_submit_nodes(
+        self,
+        model_id: str,
+        seed_ids: Sequence[int],
+        *,
+        host: Optional[str] = None,
+        fanouts: Optional[Sequence[Optional[int]]] = None,
+        rng_seed: Optional[int] = None,
+    ) -> Optional[int]:
+        """Answer a node query: sample the k-hop neighborhood and enqueue.
+
+        The million-node intake path: ``seed_ids`` are vertex ids in the
+        registered ``HostGraph`` (``host=`` names it; omit when exactly one
+        is registered).  The engine samples the seeds' k-hop in-neighborhood
+        (``fanouts``/``rng_seed`` default to the host entry's policy), runs
+        the sampled subgraph through the ordinary cache / bucketing /
+        executor machinery — identical samples content-hash to one
+        partition entry, the hot-node fast path — and slices the result to
+        the seed rows (in ``seed_ids`` order).
+
+        Returns the rid, or None when admission control rejected it.
+        """
+        entry_m = self.registry[model_id]
+        if entry_m.task != "node":
+            raise ValueError(
+                f"node queries need a node-task model; '{model_id}' serves "
+                f"task='{entry_m.task}'")
+        if entry_m.prepare_fn is not None and entry_m.sample_prepare_fn is None:
+            raise ValueError(
+                f"model '{model_id}' has prepare_fn="
+                f"{entry_m.salt or entry_m.prepare_fn!r} but no "
+                "sample_prepare_fn: its normalization needs host-degree "
+                "bookkeeping to stay well-defined on sampled neighborhoods "
+                "(register with sample_prepare_fn=, cf. gcn_sample_prepare)")
+        hentry = self.hosts[host if host is not None else self.hosts.sole_id]
+        hg = hentry.host
+        if hg.num_features != entry_m.f_in:
+            raise ValueError(
+                f"model '{model_id}' expects {entry_m.f_in} features, host "
+                f"graph '{hentry.name}' carries {hg.num_features}")
+        verdict = self.admission.decide(self.num_waiting)
+        if verdict == "reject":
+            return None
+        t0 = time.perf_counter()
+        try:
+            use_fanouts = (hentry.fanouts if fanouts is None
+                           else tuple(fanouts))
+            use_seed = (hentry.rng_seed if rng_seed is None
+                        else int(rng_seed))
+            # lcm(V, N)-aligned local numbering: sampled tiles become
+            # bitwise restrictions of the full graph's (module docstring of
+            # serving/sampler.py), which is what makes full-fanout samples
+            # reproduce the full forward bit-exactly at the seeds.
+            sample = sample_khop(hg, seed_ids, use_fanouts, use_seed,
+                                 align=math.lcm(self.cfg.v, self.cfg.n))
+        except Exception:
+            self.admission.stats.admitted -= 1
+            if verdict == "shed":
+                self.admission.stats.shed -= 1
+            raise
+        t_sampled = time.perf_counter()
+        spf = entry_m.sample_prepare_fn
+        # The transform closes over this sample's host vertices (their host
+        # degrees set the edge weights), so the cache key must carry the
+        # host-id layout: identical local structures over *different* host
+        # vertices must not share a partition.  Without a prepare the
+        # partition is structure-only and the extra bytes stay empty.
+        transform = (lambda g: spf(sample, hg)) if spf is not None else None
+        extra = sample.host_ids.tobytes() if spf is not None else b""
+        nq = dict(
+            seed_rows=sample.seed_rows,
+            num_seeds=int(len(sample.seed_rows)),
+            sample_s=t_sampled - t0,
+            sampled_nodes=sample.num_sampled_nodes,
+            sampled_edges=sample.num_sampled_edges,
+            fanouts_desc="x".join("full" if f is None else str(f)
+                                  for f in use_fanouts),
+        )
+        return self._enqueue(
+            model_id, sample.graph, verdict, t0,
+            transform=transform,
+            salt=f"{entry_m.sample_salt}:{hg.fingerprint}",
+            extra=extra, nq=nq)
+
+    def submit_nodes(self, model_id: str, seed_ids: Sequence[int],
+                     **kwargs) -> int:
+        """Like try_submit_nodes, but raises QueueFullError on rejection."""
+        rid = self.try_submit_nodes(model_id, seed_ids, **kwargs)
         if rid is None:
             raise QueueFullError(
                 f"waiting queue full ({self.admission.max_waiting}) and "
@@ -317,7 +459,10 @@ class GnnServeEngine:
         for i, p in enumerate(batch):
             valid = out[i][: p.graph.num_nodes]
             if entry.task == "node":
-                self.results[p.rid] = valid
+                # Node queries answer only their seed rows (in query order);
+                # whole-graph requests deliver every row.
+                self.results[p.rid] = (valid if p.seed_rows is None
+                                       else valid[p.seed_rows])
             else:
                 self.results[p.rid] = np.asarray(
                     entry.model.readout(entry.params, jnp.asarray(valid)))
@@ -334,6 +479,12 @@ class GnnServeEngine:
                 wait_ticks=serve_tick - p.submit_tick,
                 hw_latency_s=hw_lat,
                 hw_energy_j=hw_e,
+                node_query=p.seed_rows is not None,
+                num_seeds=p.num_seeds,
+                sample_s=p.sample_s,
+                sampled_nodes=p.sampled_nodes,
+                sampled_edges=p.sampled_edges,
+                fanouts=p.fanouts_desc,
             ))
         return len(batch)
 
@@ -341,15 +492,21 @@ class GnnServeEngine:
                        p: _Pending) -> tuple[float, float]:
         if entry.spec is None:
             return 0.0, 0.0
-        centry = self.cache._entries.get(p.cache_key)
+        # peek(touch=True): hardware costing revisits the entry on the
+        # *serve* path, so it must refresh LRU recency — a structure served
+        # often but submitted rarely stays resident (and stats stay submit-
+        # path-only: this is not a cache hit).
+        centry = self.cache.peek(p.cache_key)
         hw_key = ("hw", entry.model_id)  # per-model: specs differ per entry
         if centry is not None and hw_key in centry.extras:
             return centry.extras[hw_key]
         if centry is not None:
             graph = centry.extras.get("graph", p.graph)
-        elif entry.prepare_fn is not None:
+        elif entry.prepare_fn is not None and p.seed_rows is None:
             # Entry evicted between submit and serve: re-derive the executed
             # structure so the hardware numbers don't depend on cache state.
+            # (Sampled requests skip this — their transform closed over the
+            # sample; the raw subgraph is a fine analytic-cost stand-in.)
             graph, _ = entry.prepare_fn(p.graph)
         else:
             graph = p.graph

@@ -54,12 +54,25 @@ class ModelEntry:
     quantized: bool = False
     prepare_fn: Optional[Callable] = None
     dataset_name: str = "served"
+    # Sampled-serving counterpart of prepare_fn: maps a
+    # ``(SampleResult, HostGraph)`` pair to ``(graph, edge_weights)``, with
+    # degree bookkeeping taken from the host graph (subgraph degrees
+    # undercount frontier vertices).  Models with no prepare_fn need none;
+    # models with a prepare_fn cannot serve node queries without one.
+    sample_prepare_fn: Optional[Callable] = None
 
     @property
     def salt(self) -> str:
         """Cache-key salt: identifies the prepare transform, not the model,
         so models sharing a transform share preprocessing artifacts."""
         return self.prepare_fn.__qualname__ if self.prepare_fn else ""
+
+    @property
+    def sample_salt(self) -> str:
+        """Cache-key salt for the sampled intake path (distinct from the
+        whole-graph path: same raw structure, different transform)."""
+        fn = self.sample_prepare_fn
+        return "sampled:" + (fn.__qualname__ if fn else "")
 
 
 class ModelRegistry:
@@ -80,6 +93,7 @@ class ModelRegistry:
         prepare_fn: Optional[Callable] = None,
         dataset_name: str = "served",
         f_in: Optional[int] = None,
+        sample_prepare_fn: Optional[Callable] = None,
     ) -> ModelEntry:
         if model_id in self._entries:
             raise ValueError(f"model_id '{model_id}' already registered")
@@ -99,7 +113,8 @@ class ModelRegistry:
         entry = ModelEntry(
             model_id=model_id, model=model, params=params, task=task,
             f_in=int(f_in), spec=spec, quantized=quantized,
-            prepare_fn=prepare_fn, dataset_name=dataset_name)
+            prepare_fn=prepare_fn, dataset_name=dataset_name,
+            sample_prepare_fn=sample_prepare_fn)
         self._entries[model_id] = entry
         return entry
 
@@ -130,6 +145,67 @@ class ModelRegistry:
                 "bare-graph requests need exactly one registered model; "
                 f"registry holds {list(self._entries)}")
         return next(iter(self._entries))
+
+
+class HostGraphCatalog:
+    """Named resident ``HostGraph`` stores for the node-query intake path.
+
+    The model catalog answers *which forward to run*; this catalog answers
+    *which graph the query nodes live in*.  Each entry pins the serving
+    policy alongside the store — default per-layer fanouts and the rng
+    seed — because determinism is what lets hot query nodes resample
+    identical subgraphs and share one partition-cache entry.
+    """
+
+    def __init__(self):
+        self._entries: "OrderedDict[str, HostGraphEntry]" = OrderedDict()
+
+    def register(self, name: str, host, *,
+                 fanouts=(10, 10), rng_seed: int = 0) -> "HostGraphEntry":
+        if name in self._entries:
+            raise ValueError(f"host graph '{name}' already registered")
+        fanouts = tuple(fanouts)
+        if not fanouts:
+            raise ValueError("fanouts must name at least one sampled layer")
+        entry = HostGraphEntry(name=name, host=host, fanouts=fanouts,
+                               rng_seed=int(rng_seed))
+        self._entries[name] = entry
+        return entry
+
+    def __getitem__(self, name: str) -> "HostGraphEntry":
+        entry = self._entries.get(name)
+        if entry is None:
+            raise KeyError(f"unknown host graph '{name}'; registered: "
+                           f"{list(self._entries)}")
+        return entry
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._entries
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def ids(self) -> list[str]:
+        return list(self._entries)
+
+    @property
+    def sole_id(self) -> str:
+        """The single registered host graph (bare submit_nodes convenience)."""
+        if len(self._entries) != 1:
+            raise ValueError(
+                "submit_nodes without host= needs exactly one registered "
+                f"host graph; catalog holds {list(self._entries)}")
+        return next(iter(self._entries))
+
+
+@dataclasses.dataclass
+class HostGraphEntry:
+    """One resident graph plus its sampling policy."""
+
+    name: str
+    host: object               # serving.sampler.HostGraph
+    fanouts: tuple             # default per-layer fanouts (None = full)
+    rng_seed: int = 0
 
 
 class ExecutorPool:

@@ -36,6 +36,13 @@ class RequestRecord:
     wait_ticks: int = 0        # engine ticks spent waiting in the queue
     hw_latency_s: float = 0.0  # analytic GHOST inference latency
     hw_energy_j: float = 0.0
+    # Node-query (neighborhood-sampled) intake path only:
+    node_query: bool = False
+    num_seeds: int = 0         # query nodes answered by this request
+    sample_s: float = 0.0      # host-side k-hop sampling time
+    sampled_nodes: int = 0     # real vertices in the sampled subgraph
+    sampled_edges: int = 0
+    fanouts: str = ""          # e.g. "10x5" ("full" for a None layer)
 
 
 def _percentile(values, q: float) -> float:
@@ -78,6 +85,11 @@ class ServeReport:
     replicas: dict = dataclasses.field(default_factory=dict)
                              # replica name -> per-replica summary (router
                              # reports only; {} for a single engine)
+    node_query_stats: dict = dataclasses.field(default_factory=dict)
+                             # neighborhood-sampled intake counters ({} when
+                             # no node queries were served): queries, seeds,
+                             # sample-time percentiles, subgraph sizes,
+                             # fanout mix
 
     def to_json(self) -> str:
         return json.dumps(dataclasses.asdict(self), indent=2, default=float)
@@ -106,6 +118,15 @@ class ServeReport:
                f"strategy={self.topology.get('strategy')})\n"
                if self.topology else "")
             + (f"  replicas: {self.replicas}\n" if self.replicas else "")
+            + (f"  node queries: {self.node_query_stats['queries']} "
+               f"({self.node_query_stats['seeds']} seeds, "
+               f"fanouts {self.node_query_stats['fanouts']}), "
+               f"sample p50={self.node_query_stats['sample_p50_ms']:.1f}ms "
+               f"p99={self.node_query_stats['sample_p99_ms']:.1f}ms, "
+               f"mean subgraph "
+               f"{self.node_query_stats['mean_sampled_nodes']:.0f} nodes / "
+               f"{self.node_query_stats['mean_sampled_edges']:.0f} edges\n"
+               if self.node_query_stats else "")
             + f"  GHOST hardware estimate: {self.hw_latency_s * 1e6:.1f} us, "
             f"{self.hw_energy_j * 1e3:.3f} mJ, {self.hw_req_per_s:.0f} req/s, "
             f"avg power {self.hw_avg_power_w:.1f} W"
@@ -133,6 +154,24 @@ def build_report(
         per_model[r.model_id] = per_model.get(r.model_id, 0) + 1
     hw_lat = sum(r.hw_latency_s for r in records)
     hw_e = sum(r.hw_energy_j for r in records)
+    nq = [r for r in records if r.node_query]
+    node_query_stats: dict = {}
+    if nq:
+        samples = [r.sample_s for r in nq]
+        fanout_mix: dict[str, int] = {}
+        for r in nq:
+            fanout_mix[r.fanouts] = fanout_mix.get(r.fanouts, 0) + 1
+        node_query_stats = {
+            "queries": len(nq),
+            "seeds": sum(r.num_seeds for r in nq),
+            "fanouts": fanout_mix,
+            "sample_p50_ms": _percentile(samples, 50) * 1e3,
+            "sample_p99_ms": _percentile(samples, 99) * 1e3,
+            "mean_sampled_nodes": float(np.mean(
+                [r.sampled_nodes for r in nq])),
+            "mean_sampled_edges": float(np.mean(
+                [r.sampled_edges for r in nq])),
+        }
     return ServeReport(
         requests=len(records),
         wall_s=wall_s,
@@ -163,4 +202,5 @@ def build_report(
         kernel_configs=kernel_configs or {},
         topology=topology or {},
         replicas=replicas or {},
+        node_query_stats=node_query_stats,
     )

@@ -38,7 +38,7 @@ shared.
 from __future__ import annotations
 
 import time
-from typing import Optional
+from typing import Optional, Sequence
 
 import numpy as np
 
@@ -47,6 +47,7 @@ from repro.serving.admission import AdmissionStats
 from repro.serving.cache import CacheStats
 from repro.serving.engine import GnnServeEngine, QueueFullError
 from repro.serving.report import ServeReport, build_report
+from repro.serving.sampler import HostGraph
 
 
 class EngineRouter:
@@ -79,6 +80,8 @@ class EngineRouter:
             self.replicas.append(GnnServeEngine(**kwargs))
         # model_id -> tuple of eligible replica indices (len>1 iff hot).
         self._placement: dict[str, tuple[int, ...]] = {}
+        # host graph name -> tuple of replica indices holding a copy.
+        self._host_placement: dict[str, tuple[int, ...]] = {}
         self._pinned_count = [0] * num_replicas  # cold models per replica
         # global rid -> (replica index, replica-local rid)
         self._rid_map: dict[int, tuple[int, int]] = {}
@@ -128,6 +131,43 @@ class EngineRouter:
                            f"{list(self._placement)}")
         return where
 
+    def register_host_graph(
+        self, name: str, host: HostGraph, *,
+        replicas: Optional[Sequence[int]] = None,
+        fanouts: Sequence[Optional[int]] = (10, 10),
+        rng_seed: int = 0,
+    ) -> tuple[int, ...]:
+        """Place one resident ``HostGraph`` for node-query serving.
+
+        ``replicas=None`` registers the store on every replica (the numpy
+        CSR is host memory, cheap to share in-process); an explicit index
+        list pins it — node queries then only route to replicas holding
+        the graph.  Returns the tuple of holding replica indices.
+        """
+        if name in self._host_placement:
+            raise ValueError(f"host graph '{name}' already placed")
+        if replicas is None:
+            where = tuple(range(self.num_replicas))
+        else:
+            where = tuple(sorted(set(int(i) for i in replicas)))
+            if not where:
+                raise ValueError("replicas must name at least one replica")
+            if where[0] < 0 or where[-1] >= self.num_replicas:
+                raise ValueError(f"replica index out of range "
+                                 f"[0, {self.num_replicas}): {where}")
+        for i in where:
+            self.replicas[i].register_host_graph(
+                name, host, fanouts=fanouts, rng_seed=rng_seed)
+        self._host_placement[name] = where
+        return where
+
+    def host_placement(self, name: str) -> tuple[int, ...]:
+        where = self._host_placement.get(name)
+        if where is None:
+            raise KeyError(f"unknown host graph '{name}'; placed: "
+                           f"{list(self._host_placement)}")
+        return where
+
     # ------------------------------------------------------------------
     # Request intake and routing.
     # ------------------------------------------------------------------
@@ -159,6 +199,44 @@ class EngineRouter:
             raise QueueFullError(
                 f"all {len(self.placement(model_id))} eligible replicas "
                 f"rejected model '{model_id}' (waiting queues full)")
+        return rid
+
+    def try_submit_nodes(self, model_id: str, seed_ids, *,
+                         host: Optional[str] = None,
+                         **kwargs) -> Optional[int]:
+        """Route one node query to a replica holding both the model and the
+        host graph (shortest queue first, admission failover); returns a
+        global rid or None when every such replica rejected it."""
+        where_m = self.placement(model_id)
+        if host is None:
+            if len(self._host_placement) != 1:
+                raise ValueError(
+                    "node queries without host= need exactly one placed "
+                    f"host graph; router holds {list(self._host_placement)}")
+            host = next(iter(self._host_placement))
+        where_h = set(self.host_placement(host))
+        eligible = [i for i in where_m if i in where_h]
+        if not eligible:
+            raise ValueError(
+                f"no replica holds both model '{model_id}' ({where_m}) and "
+                f"host graph '{host}' ({sorted(where_h)})")
+        order = sorted(eligible, key=lambda i: self.replicas[i].num_waiting)
+        for i in order:
+            local = self.replicas[i].try_submit_nodes(
+                model_id, seed_ids, host=host, **kwargs)
+            if local is not None:
+                rid = self._next_rid
+                self._next_rid += 1
+                self._rid_map[rid] = (i, local)
+                return rid
+        return None
+
+    def submit_nodes(self, model_id: str, seed_ids, **kwargs) -> int:
+        rid = self.try_submit_nodes(model_id, seed_ids, **kwargs)
+        if rid is None:
+            raise QueueFullError(
+                f"all replicas eligible for node queries on '{model_id}' "
+                "rejected the request (waiting queues full)")
         return rid
 
     # ------------------------------------------------------------------
@@ -236,6 +314,7 @@ class EngineRouter:
                 "shed": e.admission.stats.shed,
                 "traces_compiled": e.pool.trace_count,
                 "topology": e.pool.topology(),
+                "kernel_configs": e.pool.kernel_configs(),
             }
         first = self.replicas[0]
         waiting_wait = max((max(
@@ -249,10 +328,51 @@ class EngineRouter:
             scheduler=first.scheduler.name,
             admission_stats=admission,
             queue_max_wait_ticks=max(waiting_wait, dropped_wait),
-            kernel_configs=first.pool.kernel_configs(),
-            topology=first.pool.topology(),
+            kernel_configs=self._merged_kernel_configs(),
+            topology=self._merged_topology(),
             replicas=per_replica,
         )
+
+    def _merged_kernel_configs(self) -> dict:
+        """Union of every replica's live kernel configs.
+
+        Taking replica 0's view alone would silently drop everything
+        replicas 1..N-1 compiled (per-replica tuners resolve their own
+        winners; heterogeneous pools can pin different overrides).  Keys
+        agreeing across replicas merge; a key whose config *differs* from
+        the one already merged is kept under a ``replicaI:`` prefix so no
+        resolution is lost.  Full per-replica views live in
+        ``ServeReport.replicas[...]["kernel_configs"]``.
+        """
+        merged: dict = {}
+        for i, e in enumerate(self.replicas):
+            for key, cfg in e.pool.kernel_configs().items():
+                if key not in merged:
+                    merged[key] = cfg
+                elif merged[key] != cfg:
+                    merged[f"replica{i}:{key}"] = cfg
+        return merged
+
+    def _merged_topology(self) -> dict:
+        """One topology when the replicas agree; an aggregate otherwise.
+
+        Uniform replicas (the common case) report their shared mesh
+        unchanged.  With per-replica meshes the merged view sums the
+        device counts and marks itself heterogeneous — per-replica meshes
+        stay in ``ServeReport.replicas[...]["topology"]``.
+        """
+        topos = [e.pool.topology() for e in self.replicas]
+        if not any(topos):
+            return {}
+        if all(t == topos[0] for t in topos):
+            return dict(topos[0])
+        return {
+            # A replica without a mesh still occupies one device.
+            "num_devices": sum(t.get("num_devices", 1) for t in topos),
+            "heterogeneous": True,
+            "mesh_shapes": {f"replica{i}": t.get("mesh_shape")
+                            for i, t in enumerate(topos)},
+        }
 
     def reset_metrics(self) -> None:
         for e in self.replicas:

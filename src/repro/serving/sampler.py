@@ -1,0 +1,347 @@
+"""Neighborhood-sampled node-query serving: the million-node intake path.
+
+Everything the engine served before this module was a whole small graph.
+GHOST's own motivating workloads — recommendation and social-network
+analysis (paper Section 1) — are *node queries against one huge resident
+graph* that never fits a single blocked forward.  Both GNN-acceleration
+surveys in PAPERS.md (arXiv 2010.00130, arXiv 2306.14052) identify
+GraphSAGE-style neighborhood sampling as the scalability lever for that
+regime; this module supplies it:
+
+  ``HostGraph``
+      one large resident graph as a host-side (numpy) CSR *in-adjacency*
+      store — ``indptr``/``indices`` over destination vertices, so the
+      sampler can pull the in-neighborhood of any vertex in O(degree).
+      Millions of nodes cost tens of MB; nothing here touches a device.
+  ``sample_khop``
+      deterministic per-layer fanout sampler: expand ``seeds`` for
+      ``len(fanouts)`` hops (``None`` fanout = take every in-neighbor),
+      then extract the sampled subgraph as an ordinary ``core.graph.Graph``
+      the rest of the serving stack (partition cache, bucketing, vmapped
+      executors) consumes unchanged.
+  ``gcn_sample_prepare``
+      the degree bookkeeping that keeps GCN normalization well-defined on
+      sampled neighborhoods: symmetric-normalized edge weights computed
+      from the *host graph's* degrees (not the truncated subgraph's), via
+      the same float64 formula as ``Graph.gcn_edge_weights``.
+
+Exactness contract (what the tests pin):
+
+A full-fanout sample of the whole k-hop in-neighborhood reproduces the
+full-graph blocked forward *bit-exactly* at the seed rows, on every
+backend.  Two mechanisms make that true:
+
+  * **Block-aligned local numbering.**  Local ids preserve host ids modulo
+    ``align`` (pass ``align = lcm(V, N)``): the sampler keeps whole
+    ``align``-sized host-id blocks, so every sampled vertex keeps its
+    position inside its V- and N-group.  Each sampled adjacency tile is
+    then a bitwise *restriction* of the corresponding full-graph tile —
+    same values at the same within-tile positions — so the per-tile
+    ``(V x N) @ (N x F)`` products and the tile-order accumulation match
+    the full forward bit-for-bit (missing tiles contribute exact zeros).
+    Unoccupied slots in a kept block are "ghost" rows: zero features, no
+    edges, sliced away with the rest of the padding.
+  * **Host-degree normalization.**  MEAN degrees are tile row sums, which
+    under full fanout equal the full-graph degrees for every vertex whose
+    output can reach a seed.  GCN's symmetric weights additionally involve
+    the *source* vertex's degree — truncated at the sample frontier — so
+    ``gcn_sample_prepare`` computes every weight from ``HostGraph``
+    degrees instead.
+
+Determinism: the sample for a given ``(rng_seed, vertex)`` pair never
+depends on the batch it appears in, so a hot query node resamples the
+identical subgraph on every request and the engine's content-hash cache
+collapses them onto one partition entry (sampled-query cache hits are the
+whole point of a fixed rng policy).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import NamedTuple, Optional, Sequence
+
+import numpy as np
+
+from repro.core.graph import Graph
+
+
+@dataclasses.dataclass
+class HostGraph:
+    """One large resident graph, host-side, CSR over *in*-edges.
+
+    Attributes:
+      indptr: [Nv + 1] int64 — in-edge CSR offsets per destination vertex.
+      indices: [E] int32 — source vertex of each in-edge, ascending within
+        each destination's slice (ties = parallel edges are kept: the
+        partitioner accumulates them exactly like the edge list would).
+      features: [Nv, F] float node features (dtype preserved end-to-end).
+      has_loop: [Nv] bool — vertex already carries a self-loop (consumed by
+        the GCN degree bookkeeping, which must not double-count it).
+      fingerprint: content hash of the *structure* (not the features, which
+        enter per-request): distinguishes cache entries sampled from
+        different host graphs, and will version delta updates later.
+    """
+
+    indptr: np.ndarray
+    indices: np.ndarray
+    features: np.ndarray
+    has_loop: np.ndarray
+    fingerprint: str
+    name: str = "host"
+
+    @property
+    def num_nodes(self) -> int:
+        return int(self.indptr.shape[0]) - 1
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.indices.shape[0])
+
+    @property
+    def num_features(self) -> int:
+        return int(self.features.shape[1])
+
+    def in_degrees(self) -> np.ndarray:
+        return np.diff(self.indptr)
+
+    def in_neighbors(self, v: int) -> np.ndarray:
+        return self.indices[self.indptr[v]: self.indptr[v + 1]]
+
+    @classmethod
+    def from_edges(cls, edge_src: np.ndarray, edge_dst: np.ndarray,
+                   features: np.ndarray, name: str = "host") -> "HostGraph":
+        """Build the CSR store from an edge list (A[dst, src] convention)."""
+        nv = int(features.shape[0])
+        edge_src = np.asarray(edge_src, dtype=np.int64)
+        edge_dst = np.asarray(edge_dst, dtype=np.int64)
+        if edge_src.shape != edge_dst.shape:
+            raise ValueError("edge_src/edge_dst shape mismatch")
+        if edge_src.size and (edge_src.min() < 0 or edge_dst.min() < 0
+                              or edge_src.max() >= nv or edge_dst.max() >= nv):
+            raise ValueError("edge endpoint out of range")
+        order = np.lexsort((edge_src, edge_dst))
+        src, dst = edge_src[order], edge_dst[order]
+        indptr = np.zeros(nv + 1, dtype=np.int64)
+        np.add.at(indptr, dst + 1, 1)
+        indptr = np.cumsum(indptr)
+        has_loop = np.zeros(nv, dtype=bool)
+        has_loop[dst[src == dst]] = True
+        h = hashlib.sha1()
+        h.update(np.int64(nv).tobytes())
+        h.update(indptr.tobytes())
+        h.update(src.astype(np.int32).tobytes())
+        return cls(indptr=indptr, indices=src.astype(np.int32),
+                   features=features, has_loop=has_loop,
+                   fingerprint=h.hexdigest(), name=name)
+
+    @classmethod
+    def from_graph(cls, graph: Graph, name: Optional[str] = None) -> "HostGraph":
+        return cls.from_edges(graph.edge_src, graph.edge_dst, graph.node_feat,
+                              name=name or graph.name)
+
+    @classmethod
+    def synthetic_power_law(cls, num_nodes: int, avg_degree: int = 8,
+                            num_features: int = 16, seed: int = 0,
+                            exponent: float = 1.1,
+                            name: str = "power_law") -> "HostGraph":
+        """Skewed synthetic social/recommendation graph for demos and sweeps.
+
+        Destination endpoints are uniform (every user has a neighborhood);
+        source endpoints follow a Zipf-like propensity over a random node
+        permutation, so a few hub vertices appear in a large fraction of
+        neighborhoods — the degree skew neighborhood sampling exists to tame.
+        """
+        rng = np.random.default_rng(seed)
+        num_edges = num_nodes * avg_degree
+        ranks = np.arange(1, num_nodes + 1, dtype=np.float64)
+        p = ranks ** (-exponent)
+        p /= p.sum()
+        perm = rng.permutation(num_nodes)
+        src = perm[rng.choice(num_nodes, size=num_edges, p=p)]
+        dst = rng.integers(0, num_nodes, num_edges)
+        feat = rng.standard_normal((num_nodes, num_features)).astype(np.float32)
+        return cls.from_edges(src.astype(np.int64), dst.astype(np.int64),
+                              feat, name=name)
+
+
+class SampleResult(NamedTuple):
+    """One sampled k-hop subgraph, laid out for the blocked pipeline.
+
+    ``graph`` is ghost-padded: local rows whose ``host_ids`` entry is -1
+    are unoccupied slots of a kept ``align`` block (zero features, no
+    edges).  ``num_sampled_nodes``/``num_sampled_edges`` count the real
+    content; ``graph.num_nodes`` counts rows including ghosts.
+    """
+
+    graph: Graph            # sampled subgraph (ghost-padded, edges sorted)
+    seed_rows: np.ndarray   # [S] int32 local row of each input seed, in order
+    host_ids: np.ndarray    # [graph.num_nodes] int64 host id per row, -1=ghost
+    num_sampled_nodes: int
+    num_sampled_edges: int
+    fanouts: tuple
+    rng_seed: int
+
+    @property
+    def real_rows(self) -> np.ndarray:
+        return np.flatnonzero(self.host_ids >= 0).astype(np.int32)
+
+
+def _gather_csr(host: HostGraph, targets: np.ndarray
+                ) -> tuple[np.ndarray, np.ndarray]:
+    """All in-edges of ``targets``: (src, dst) host-id arrays, vectorized."""
+    deg = host.indptr[targets + 1] - host.indptr[targets]
+    total = int(deg.sum())
+    if total == 0:
+        return (np.zeros(0, np.int64),) * 2
+    starts = host.indptr[targets]
+    # Range-gather: positions [start_i, start_i + deg_i) for every target.
+    offs = np.arange(total, dtype=np.int64) - np.repeat(
+        np.cumsum(deg) - deg, deg)
+    idx = np.repeat(starts, deg) + offs
+    return host.indices[idx].astype(np.int64), np.repeat(targets, deg)
+
+
+def sample_khop(
+    host: HostGraph,
+    seeds: Sequence[int],
+    fanouts: Sequence[Optional[int]],
+    rng_seed: int = 0,
+    align: int = 1,
+) -> SampleResult:
+    """Deterministic per-layer fanout sample of the k-hop in-neighborhood.
+
+    Layer ``l`` (l = 1..len(fanouts)) draws up to ``fanouts[l-1]``
+    in-neighbors (without replacement; ``None`` = all of them) for every
+    vertex first reached at layer ``l-1``; sampled sources join the node
+    set and become the next frontier.  A vertex's draw depends only on
+    ``(rng_seed, vertex)`` — never on the batch — so hot query nodes
+    resample identical subgraphs and collapse onto one partition-cache
+    entry.
+
+    ``align`` controls the local numbering: host-id blocks of this size
+    are kept whole (unsampled slots become ghost rows), which preserves
+    every vertex's position modulo ``align``.  Pass ``lcm(V, N)`` to make
+    sampled adjacency tiles bitwise restrictions of the full graph's
+    (the engine does); ``align=1`` gives plain compaction.
+
+    Returns the subgraph with edges sorted by (dst, src) — a canonical
+    byte layout, so identical samples content-hash identically.
+    """
+    seeds = np.asarray(seeds, dtype=np.int64)
+    if seeds.ndim != 1 or seeds.size == 0:
+        raise ValueError("seeds must be a non-empty 1-D sequence of node ids")
+    if seeds.min() < 0 or seeds.max() >= host.num_nodes:
+        raise ValueError(
+            f"seed out of range [0, {host.num_nodes}): "
+            f"{seeds[(seeds < 0) | (seeds >= host.num_nodes)][:4]}")
+    if align < 1:
+        raise ValueError("align must be >= 1")
+    fanouts = tuple(fanouts)
+    for f in fanouts:
+        if f is not None and f < 1:
+            raise ValueError(f"fanouts must be positive or None, got {f}")
+
+    node_set = np.unique(seeds)
+    frontier = node_set
+    src_parts: list[np.ndarray] = []
+    dst_parts: list[np.ndarray] = []
+    for fanout in fanouts:
+        if frontier.size == 0:
+            break
+        src, dst = _gather_csr(host, frontier)
+        if fanout is not None and src.size:
+            deg = host.indptr[frontier + 1] - host.indptr[frontier]
+            over = frontier[deg > fanout]
+            if over.size:
+                keep = np.ones(src.size, dtype=bool)
+                # Per-vertex deterministic draw: seeded by (rng_seed, v)
+                # only, so the subsample never depends on batch
+                # composition.  dst is grouped by frontier order, so each
+                # over-fanout vertex owns one contiguous slice.
+                bounds = np.cumsum(deg) - deg
+                pos = {int(v): int(b) for v, b in zip(frontier, bounds)}
+                dmap = dict(zip(frontier.tolist(), deg.tolist()))
+                for v in over:
+                    d, b = dmap[int(v)], pos[int(v)]
+                    rng = np.random.default_rng((rng_seed, int(v)))
+                    chosen = rng.choice(d, size=fanout, replace=False)
+                    drop = np.ones(d, dtype=bool)
+                    drop[chosen] = False
+                    keep[b: b + d] &= ~drop
+                src, dst = src[keep], dst[keep]
+        src_parts.append(src)
+        dst_parts.append(dst)
+        grown = np.union1d(node_set, src)
+        frontier = np.setdiff1d(grown, node_set, assume_unique=True)
+        node_set = grown
+
+    edge_src = (np.concatenate(src_parts) if src_parts
+                else np.zeros(0, np.int64))
+    edge_dst = (np.concatenate(dst_parts) if dst_parts
+                else np.zeros(0, np.int64))
+
+    # Block-aligned local numbering: keep whole align-sized host-id blocks.
+    blocks = np.unique(node_set // align)
+    num_local = int(blocks.size) * align
+
+    def to_local(h: np.ndarray) -> np.ndarray:
+        return np.searchsorted(blocks, h // align) * align + h % align
+
+    host_ids = np.full(num_local, -1, dtype=np.int64)
+    host_ids[to_local(node_set)] = node_set
+    feat = np.zeros((num_local, host.num_features), host.features.dtype)
+    feat[to_local(node_set)] = host.features[node_set]
+
+    src_l = to_local(edge_src)
+    dst_l = to_local(edge_dst)
+    order = np.lexsort((src_l, dst_l))
+    graph = Graph(
+        edge_src=src_l[order].astype(np.int32),
+        edge_dst=dst_l[order].astype(np.int32),
+        node_feat=feat,
+        name=f"{host.name}:sample",
+    )
+    return SampleResult(
+        graph=graph,
+        seed_rows=to_local(seeds).astype(np.int32),
+        host_ids=host_ids,
+        num_sampled_nodes=int(node_set.size),
+        num_sampled_edges=int(edge_src.size),
+        fanouts=fanouts,
+        rng_seed=rng_seed,
+    )
+
+
+def gcn_sample_prepare(sample: SampleResult, host: HostGraph
+                       ) -> tuple[Graph, np.ndarray]:
+    """GCN preprocessing for a sampled subgraph, with host-degree weights.
+
+    Mirrors ``serving.engine.gcn_prepare`` (self-loops + symmetric
+    normalization) but takes every degree from the *host* graph: the
+    subgraph truncates the in-edges of frontier vertices, and normalizing
+    by the truncated degree would silently re-weight every message those
+    vertices send inward.  Weights use the same float64 expression as
+    ``Graph.gcn_edge_weights``, so under full fanout each per-edge weight
+    is bitwise identical to the full-graph one.
+
+    Self-loops are added for real (sampled) rows only — ghost rows carry
+    no edges at all, exactly like the padding they are.
+    """
+    g = sample.graph
+    real = sample.real_rows
+    hosts = sample.host_ids[real]
+    # With-self-loop degree: the host in-degree plus the loop this prepare
+    # adds (unless the host vertex already carries one).
+    deg = np.zeros(g.num_nodes, dtype=np.int64)
+    deg[real] = host.in_degrees()[hosts] + np.where(host.has_loop[hosts], 0, 1)
+    loop_rows = real[~host.has_loop[hosts]].astype(np.int32)
+    g2 = dataclasses.replace(
+        g,
+        edge_src=np.concatenate([g.edge_src, loop_rows]),
+        edge_dst=np.concatenate([g.edge_dst, loop_rows]),
+    )
+    degf = deg.astype(np.float64)
+    w = 1.0 / np.sqrt(np.maximum(degf[g2.edge_dst], 1)
+                      * np.maximum(degf[g2.edge_src], 1))
+    return g2, w.astype(np.float32)

@@ -174,6 +174,104 @@ def test_merged_report():
     assert "replicas:" in rep.pretty()
 
 
+def test_merged_report_unions_replica_views():
+    """Regression: the merged report must not take replica 0's kernel
+    configs / topology as the whole story — replicas with distinct meshes
+    or overrides keep their contributions in the union."""
+    from types import SimpleNamespace
+
+    from repro.launch.mesh import make_data_mesh
+
+    model, params = make_model()
+    # Distinct meshes per replica: replica0 meshless, replica1 on a 1-device
+    # data mesh (no extra host devices needed).
+    router = EngineRouter(2, slots=2, meshes=[None, make_data_mesh(1)])
+    router.register("m", model, params, hot=True)
+    # Distinct per-replica kernel-config views (a per-replica override).
+    cfg0 = SimpleNamespace(fused=True, tile=8)
+    cfg1 = SimpleNamespace(fused=False, tile=4)
+    router.replicas[0].pool.kernel_config = cfg0
+    router.replicas[1].pool.kernel_config = cfg1
+    rep = router.run([("m", make_graph(300 + i)) for i in range(4)])
+
+    # Replica 1's mesh is not dropped: the merged topology aggregates.
+    assert rep.topology["num_devices"] == 2
+    assert rep.topology["heterogeneous"] is True
+    assert rep.topology["mesh_shapes"]["replica1"] == {"data": 1}
+    # Conflicting "*" overrides both survive, replica detail preserved.
+    assert rep.kernel_configs["*"] == vars(cfg0)
+    assert rep.kernel_configs["replica1:*"] == vars(cfg1)
+    assert rep.replicas["replica0"]["kernel_configs"]["*"] == vars(cfg0)
+    assert rep.replicas["replica1"]["kernel_configs"]["*"] == vars(cfg1)
+    assert rep.replicas["replica1"]["topology"]["num_devices"] == 1
+    # Uniform replicas still report the shared view unchanged.
+    router2 = EngineRouter(2, slots=2)
+    router2.register("m", model, params, hot=True)
+    rep2 = router2.run([("m", make_graph(400))])
+    assert rep2.topology == {}
+    assert rep2.kernel_configs == {}
+
+
+# ---------------------------------------------------------------------------
+# Node-query routing.
+# ---------------------------------------------------------------------------
+
+
+def test_node_queries_route_to_host_graph_holders():
+    from repro.serving import HostGraph
+
+    host = HostGraph.synthetic_power_law(300, avg_degree=5, num_features=8,
+                                         seed=0)
+    model = build_model("sage", 8, 2, hidden=8)
+    params = model.init(jax.random.PRNGKey(0))
+    router = EngineRouter(2, slots=2)
+    router.register("m", model, params, hot=True)
+    # Host graph pinned to replica 1: queries must land there even though
+    # the model is hot everywhere.
+    assert router.register_host_graph("hg", host, replicas=[1],
+                                      fanouts=(4, 4)) == (1,)
+    rids = [router.submit_nodes("m", [i]) for i in range(4)]
+    router.drain()
+    assert len(router.replicas[1].records) == 4
+    assert not router.replicas[0].records
+    for rid in rids:
+        assert router.take_result(rid).shape == (1, 2)
+    # Placement bookkeeping + error paths.
+    assert router.host_placement("hg") == (1,)
+    with pytest.raises(ValueError, match="already placed"):
+        router.register_host_graph("hg", host)
+    with pytest.raises(KeyError, match="unknown host graph"):
+        router.host_placement("nope")
+    with pytest.raises(ValueError, match="out of range"):
+        router.register_host_graph("hg2", host, replicas=[5])
+
+
+def test_node_queries_balance_and_intersect_placement():
+    from repro.serving import HostGraph
+
+    host = HostGraph.synthetic_power_law(200, avg_degree=4, num_features=8,
+                                         seed=1)
+    model = build_model("sage", 8, 2, hidden=8)
+    params = model.init(jax.random.PRNGKey(0))
+    router = EngineRouter(2, slots=2)
+    cold_home = router.register("cold", model, params)[0]
+    router.register_host_graph("hg", host)  # every replica holds it
+    # Eligible = model placement ∩ host placement = the cold pin.
+    router.submit_nodes("cold", [3])
+    router.submit_nodes("cold", [4])
+    assert router.replicas[cold_home].num_waiting == 2
+    assert router.replicas[1 - cold_home].num_waiting == 0
+    router.drain()
+    # Empty intersection raises rather than silently serving elsewhere.
+    model2 = build_model("sage", 8, 2, hidden=8)
+    router2 = EngineRouter(2, slots=2)
+    router2.register("m", model2, model2.init(jax.random.PRNGKey(1)),
+                     replica=0)
+    router2.register_host_graph("hg", host, replicas=[1])
+    with pytest.raises(ValueError, match="no replica holds both"):
+        router2.try_submit_nodes("m", [0])
+
+
 def test_router_bare_graph_single_model():
     model, params = make_model()
     router = EngineRouter(2, slots=2)

@@ -1,0 +1,407 @@
+"""Neighborhood-sampled node-query serving (serving/sampler.py + engine).
+
+The load-bearing claims:
+  * ``HostGraph`` is a faithful CSR in-adjacency store with a
+    structure-only fingerprint;
+  * ``sample_khop`` is deterministic per (rng_seed, vertex), respects the
+    per-layer fanout budget, and under full fanout covers the whole k-hop
+    in-neighborhood;
+  * the exactness contract: a full-fanout sample served through
+    ``submit_nodes`` reproduces the full-graph forward BIT-EXACTLY at the
+    seed rows, on all three backends, for both plain (SAGE/mean) and
+    host-degree-normalized (GCN) models;
+  * determinism feeds the cache: identical queries hash to one partition
+    entry;
+  * zero-edge / isolated-seed edge cases serve cleanly.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core.graph import Graph
+from repro.gnn import build_model
+from repro.photonic.perf import GhostConfig
+from repro.serving import (
+    GnnServeEngine,
+    HostGraph,
+    gcn_prepare,
+    gcn_sample_prepare,
+    sample_khop,
+)
+
+from tests._hypothesis_compat import given, st
+
+CFG = GhostConfig()  # v=20, n=20 -> sampler align = lcm = 20
+
+
+def power_law_host(nv=400, deg=5, f=6, seed=0):
+    return HostGraph.synthetic_power_law(
+        nv, avg_degree=deg, num_features=f, seed=seed)
+
+
+def full_graph_of(host: HostGraph) -> Graph:
+    """The host graph as an ordinary edge-list Graph (reference forward)."""
+    dst = np.repeat(np.arange(host.num_nodes, dtype=np.int64),
+                    np.diff(host.indptr))
+    return Graph(edge_src=host.indices.astype(np.int32),
+                 edge_dst=dst.astype(np.int32),
+                 node_feat=host.features)
+
+
+# ---------------------------------------------------------------------------
+# HostGraph store.
+# ---------------------------------------------------------------------------
+
+
+def test_host_graph_csr_roundtrip():
+    src = np.array([1, 2, 2, 0, 3, 3])
+    dst = np.array([0, 0, 1, 2, 3, 3])  # 3 has a (parallel) self-loop
+    feat = np.arange(8, dtype=np.float32).reshape(4, 2)
+    host = HostGraph.from_edges(src, dst, feat)
+    assert host.num_nodes == 4 and host.num_edges == 6
+    np.testing.assert_array_equal(host.in_degrees(), [2, 1, 1, 2])
+    np.testing.assert_array_equal(host.in_neighbors(0), [1, 2])
+    np.testing.assert_array_equal(host.has_loop, [False, False, False, True])
+    # Parallel edges are kept (the partitioner accumulates them).
+    np.testing.assert_array_equal(host.in_neighbors(3), [3, 3])
+
+
+def test_host_graph_fingerprint_is_structure_only():
+    src = np.array([1, 2]); dst = np.array([0, 1])
+    f1 = np.zeros((3, 4), np.float32)
+    f2 = np.ones((3, 4), np.float32)
+    a = HostGraph.from_edges(src, dst, f1)
+    b = HostGraph.from_edges(src, dst, f2)
+    c = HostGraph.from_edges(np.array([2, 1]), dst, f1)
+    assert a.fingerprint == b.fingerprint  # features don't enter
+    assert a.fingerprint != c.fingerprint  # structure does
+
+
+def test_host_graph_from_graph_matches_from_edges():
+    g = full_graph_of(power_law_host(nv=60))
+    host = HostGraph.from_graph(g)
+    assert host.num_edges == g.num_edges
+    np.testing.assert_array_equal(host.in_degrees(), g.in_degrees())
+
+
+# ---------------------------------------------------------------------------
+# sample_khop mechanics.
+# ---------------------------------------------------------------------------
+
+
+def test_sample_determinism_and_block_alignment():
+    host = power_law_host()
+    a = sample_khop(host, [3, 77], (4, 2), rng_seed=9, align=20)
+    b = sample_khop(host, [3, 77], (4, 2), rng_seed=9, align=20)
+    np.testing.assert_array_equal(a.graph.edge_src, b.graph.edge_src)
+    np.testing.assert_array_equal(a.graph.edge_dst, b.graph.edge_dst)
+    np.testing.assert_array_equal(a.host_ids, b.host_ids)
+    np.testing.assert_array_equal(a.seed_rows, b.seed_rows)
+    # Block alignment: every real row keeps its host position mod align.
+    real = a.real_rows
+    np.testing.assert_array_equal(real % 20, a.host_ids[real] % 20)
+    # Ghost rows carry no features and no edges.
+    ghosts = np.flatnonzero(a.host_ids < 0)
+    assert not np.isin(a.graph.edge_src, ghosts).any()
+    assert not np.isin(a.graph.edge_dst, ghosts).any()
+    np.testing.assert_array_equal(a.graph.node_feat[ghosts], 0.0)
+
+
+def test_sample_rng_seed_changes_subsample():
+    host = power_law_host(nv=300, deg=12)
+    a = sample_khop(host, [5], (3,), rng_seed=0)
+    b = sample_khop(host, [5], (3,), rng_seed=1)
+    # The seed vertex has >3 in-neighbors with overwhelming probability;
+    # different policies should pick different subsets at least once.
+    assert (a.graph.num_edges != b.graph.num_edges
+            or not np.array_equal(np.sort(a.host_ids[a.real_rows]),
+                                  np.sort(b.host_ids[b.real_rows])))
+
+
+def test_sample_respects_fanout_budget():
+    host = power_law_host(nv=300, deg=12)
+    s = sample_khop(host, [5, 9], (3, 2), rng_seed=0)
+    # Layer budgets bound the per-destination edge counts: seeds get <= 3
+    # in-edges, frontier vertices <= 2 (a vertex reached at layer 1 that is
+    # also a seed keeps its seed-layer sample).
+    deg = np.zeros(s.graph.num_nodes, np.int64)
+    np.add.at(deg, s.graph.edge_dst, 1)
+    assert deg[s.seed_rows].max() <= 3
+    assert deg.max() <= 3
+    assert s.num_sampled_edges == s.graph.num_edges
+
+
+def test_sample_full_fanout_covers_khop():
+    host = power_law_host(nv=200, deg=4)
+    seeds = [0, 111]
+    s = sample_khop(host, seeds, (None, None))
+    # BFS the in-adjacency 2 deep on the host and compare edge sets.
+    lvl0 = np.unique(seeds)
+    e1_src = np.concatenate([host.in_neighbors(v) for v in lvl0])
+    lvl1 = np.setdiff1d(np.unique(e1_src), lvl0)
+    want_edges = set()
+    for v in lvl0:
+        want_edges.update((int(u), int(v)) for u in host.in_neighbors(v))
+    for v in lvl1:
+        want_edges.update((int(u), int(v)) for u in host.in_neighbors(v))
+    got_edges = set(zip(s.host_ids[s.graph.edge_src].tolist(),
+                        s.host_ids[s.graph.edge_dst].tolist()))
+    assert got_edges == want_edges
+    assert s.num_sampled_edges == len(s.graph.edge_src)
+
+
+def test_sample_zero_edge_and_isolated_seed():
+    # A host with no edges at all: the sample is just the seed blocks.
+    feat = np.random.default_rng(0).standard_normal((50, 3)).astype(np.float32)
+    empty = HostGraph.from_edges(np.zeros(0, np.int64), np.zeros(0, np.int64),
+                                 feat)
+    s = sample_khop(empty, [7], (5, 5), align=20)
+    assert s.graph.num_edges == 0
+    assert s.num_sampled_nodes == 1
+    np.testing.assert_array_equal(
+        s.graph.node_feat[s.seed_rows[0]], feat[7])
+    # An isolated seed in a connected graph behaves the same.
+    host = power_law_host(nv=100, deg=3, seed=1)
+    iso = int(np.flatnonzero(host.in_degrees() == 0)[0]) \
+        if (host.in_degrees() == 0).any() else None
+    if iso is not None:
+        s2 = sample_khop(host, [iso], (4,))
+        assert s2.graph.num_edges == 0
+        assert s2.num_sampled_nodes == 1
+
+
+def test_sample_input_validation():
+    host = power_law_host(nv=50)
+    with pytest.raises(ValueError):
+        sample_khop(host, [], (2,))
+    with pytest.raises(ValueError):
+        sample_khop(host, [50], (2,))
+    with pytest.raises(ValueError):
+        sample_khop(host, [0], (0,))
+    with pytest.raises(ValueError):
+        sample_khop(host, [0], (2,), align=0)
+
+
+# ---------------------------------------------------------------------------
+# GCN degree bookkeeping.
+# ---------------------------------------------------------------------------
+
+
+def test_gcn_sample_prepare_matches_host_weights_under_full_fanout():
+    host = power_law_host(nv=160, deg=4)
+    g_full = full_graph_of(host)
+    gl, wl = gcn_prepare(g_full)  # whole-graph reference prepare
+    ref = {(int(s), int(d)): w
+           for s, d, w in zip(gl.edge_src, gl.edge_dst, wl)}
+    s = sample_khop(host, [11, 42], (None, None), align=20)
+    g2, w2 = gcn_sample_prepare(s, host)
+    # Every prepared sampled edge carries the bitwise-identical weight the
+    # full-graph prepare assigns the same host edge.
+    assert g2.num_edges > 0
+    for src, dst, w in zip(g2.edge_src, g2.edge_dst, w2):
+        hs, hd = int(s.host_ids[src]), int(s.host_ids[dst])
+        assert hs >= 0 and hd >= 0  # loops only on real rows
+        assert ref[(hs, hd)] == w  # exact fp32 equality
+
+
+def test_gcn_sample_prepare_uses_host_not_subgraph_degrees():
+    host = power_law_host(nv=200, deg=10)
+    s = sample_khop(host, [3], (2,), rng_seed=0)  # truncated neighborhoods
+    g2, w2 = gcn_sample_prepare(s, host)
+    host_deg = host.in_degrees()
+    # Pick a frontier edge (non-loop) and check its weight is built from
+    # the *host* degrees, which exceed the truncated subgraph's.
+    nonloop = np.flatnonzero(g2.edge_src != g2.edge_dst)
+    assert nonloop.size
+    e = int(nonloop[0])
+    hs = int(s.host_ids[g2.edge_src[e]])
+    hd = int(s.host_ids[g2.edge_dst[e]])
+    ds = host_deg[hs] + (0 if host.has_loop[hs] else 1)
+    dd = host_deg[hd] + (0 if host.has_loop[hd] else 1)
+    expect = np.float32(1.0 / np.sqrt(np.maximum(np.float64(dd), 1)
+                                      * np.maximum(np.float64(ds), 1)))
+    assert w2[e] == expect
+
+
+# ---------------------------------------------------------------------------
+# The exactness contract: sampled serving == full-graph forward at seeds.
+# ---------------------------------------------------------------------------
+
+
+def _exactness_case(model_kind, backend, nv, seed, seeds):
+    host = power_law_host(nv=nv, deg=4, f=5, seed=seed)
+    g_full = full_graph_of(host)
+    model = build_model(model_kind, 5, 2, hidden=8)
+    params = model.init(jax.random.PRNGKey(seed))
+    prep = gcn_prepare if model_kind == "gcn" else None
+
+    eng = GnnServeEngine(cfg=CFG, slots=2, backend=backend)
+    eng.register("m", model, params, task="node", prepare_fn=prep)
+    eng.register_host_graph("hg", host, fanouts=(None, None))
+    rid = eng.submit_nodes("m", seeds)
+    eng.drain()
+
+    ref_eng = GnnServeEngine(cfg=CFG, slots=2, backend=backend)
+    ref_eng.register("m", model, params, task="node", prepare_fn=prep)
+    ref_rid = ref_eng.submit("m", g_full)
+    ref_eng.drain()
+
+    np.testing.assert_array_equal(
+        eng.results[rid], ref_eng.results[ref_rid][np.asarray(seeds)])
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas", "pallas_fused"])
+@pytest.mark.parametrize("model_kind", ["sage", "gcn"])
+def test_full_fanout_bit_exact_vs_full_graph(backend, model_kind):
+    _exactness_case(model_kind, backend, nv=150, seed=0, seeds=[4, 77, 149])
+
+
+@given(st.integers(1, 40), st.integers(0, 6))
+def test_property_full_fanout_bit_exact(nv_scale, seed):
+    """Random graph sizes and seed vertices: exactness is not a fluke of
+    one layout (hypothesis where available, seeded replay otherwise)."""
+    nv = 30 + 7 * nv_scale
+    seeds = [seed % nv, (13 * seed + 7) % nv]
+    _exactness_case("sage", "jnp", nv=nv, seed=seed, seeds=seeds)
+
+
+def test_restricted_fanout_serves_and_slices_seed_rows():
+    host = power_law_host(nv=300, deg=8, f=5)
+    model = build_model("sage", 5, 2, hidden=8)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = GnnServeEngine(cfg=CFG, slots=2)
+    eng.register("m", model, params, task="node")
+    eng.register_host_graph("hg", host, fanouts=(4, 3), rng_seed=5)
+    rid = eng.submit_nodes("m", [10, 20, 10])  # duplicate seeds allowed
+    eng.drain()
+    out = eng.results[rid]
+    assert out.shape[0] == 3
+    np.testing.assert_array_equal(out[0], out[2])  # same seed, same row
+    rec = eng.records[-1]
+    assert rec.node_query and rec.num_seeds == 3
+    assert rec.fanouts == "4x3"
+    assert rec.sampled_nodes > 0
+
+
+# ---------------------------------------------------------------------------
+# Determinism -> cache hits; engine/report integration.
+# ---------------------------------------------------------------------------
+
+
+def test_identical_queries_share_one_partition_entry():
+    host = power_law_host(nv=500, deg=6, f=5)
+    model = build_model("gcn", 5, 2, hidden=8)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = GnnServeEngine(cfg=CFG, slots=4)
+    eng.register("m", model, params, task="node", prepare_fn=gcn_prepare)
+    eng.register_host_graph("hg", host, fanouts=(5, 5), rng_seed=3)
+    r1 = eng.submit_nodes("m", [42])
+    r2 = eng.submit_nodes("m", [42])  # hot query node
+    r3 = eng.submit_nodes("m", [43])  # different structure
+    eng.drain()
+    assert eng.cache.stats.hits == 1
+    assert eng.cache.stats.misses == 2
+    np.testing.assert_array_equal(eng.results[r1], eng.results[r2])
+    report = eng.report(1.0)
+    assert report.node_query_stats["queries"] == 3
+    assert report.node_query_stats["seeds"] == 3
+    assert report.node_query_stats["fanouts"] == {"5x5": 3}
+    assert "node queries: 3" in report.pretty()
+
+
+def test_same_local_structure_different_hosts_do_not_collide():
+    """Two disjoint host regions can sample isomorphic local subgraphs;
+    with GCN host-degree weights they must NOT share a partition entry."""
+    # Two structurally identical stars living in different host blocks,
+    # whose hub in-degrees differ (extra edges into the second hub from
+    # elsewhere are not sampled at fanout-limited depth 1... keep it
+    # simple: full fanout depth 1, hub degrees differ via extra leaves).
+    src = np.array([1, 2, 41, 42, 43])
+    dst = np.array([0, 0, 40, 40, 40])
+    feat = np.zeros((60, 3), np.float32)
+    host = HostGraph.from_edges(src, dst, feat)
+    model = build_model("gcn", 3, 2, hidden=4)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = GnnServeEngine(cfg=CFG, slots=2)
+    eng.register("m", model, params, task="node", prepare_fn=gcn_prepare)
+    eng.register_host_graph("hg", host, fanouts=(2,), rng_seed=0)
+    eng.submit_nodes("m", [0])   # star around 0: 2-of-2 in-edges
+    eng.submit_nodes("m", [40])  # star around 40: 2-of-3 in-edges sampled
+    eng.drain()
+    # Both samples are a 2-leaf star with identical local layout, but the
+    # hubs' host degrees (2 vs 3) give different GCN weights.
+    assert eng.cache.stats.misses == 2
+    assert eng.cache.stats.hits == 0
+
+
+def test_node_query_model_contract_errors():
+    host = power_law_host(nv=50, f=5)
+    gin = build_model("gin", 5, 2, hidden=4, mlp_layers=2)
+    sage = build_model("sage", 5, 2, hidden=8)
+
+    def custom_prepare(g):
+        return g, None
+
+    eng = GnnServeEngine(cfg=CFG, slots=1)
+    eng.register("graph_task", gin, gin.init(jax.random.PRNGKey(0)),
+                 task="graph")
+    eng.register("no_sample_prep", sage, sage.init(jax.random.PRNGKey(1)),
+                 task="node", prepare_fn=custom_prepare)
+    eng.register_host_graph("hg", host)
+    with pytest.raises(ValueError, match="node-task"):
+        eng.try_submit_nodes("graph_task", [0])
+    with pytest.raises(ValueError, match="sample_prepare_fn"):
+        eng.try_submit_nodes("no_sample_prep", [0])
+    with pytest.raises(ValueError, match="features"):
+        eng2 = GnnServeEngine(cfg=CFG, slots=1)
+        wide = build_model("sage", 9, 2, hidden=8)
+        eng2.register("wide", wide, wide.init(jax.random.PRNGKey(2)),
+                      task="node")
+        eng2.register_host_graph("hg", host)
+        eng2.try_submit_nodes("wide", [0])
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: 10^5-node host graph, bit-exact node queries.
+# ---------------------------------------------------------------------------
+
+
+def test_large_host_graph_node_queries_bit_exact():
+    """>=10^5-node synthetic HostGraph: submit_nodes output is bit-exact vs
+    the full-graph forward at the seed rows (jnp backend).
+
+    The host uses window-local edges (each vertex draws in-edges from a
+    nearby id range) so the full-graph *reference* partition stays a
+    near-band matrix — a few tiles per block-row — instead of the dense
+    tile soup a uniform random graph would produce at this size.
+    """
+    nv = 100_000
+    rng = np.random.default_rng(0)
+    deg = 4
+    dst = np.repeat(np.arange(nv, dtype=np.int64), deg)
+    src = (dst + rng.integers(-40, 41, dst.size)) % nv
+    feat = rng.standard_normal((nv, 4)).astype(np.float32)
+    host = HostGraph.from_edges(src, dst, feat)
+    assert host.num_nodes >= 100_000
+
+    model = build_model("sage", 4, 2, hidden=8)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = GnnServeEngine(cfg=CFG, slots=1)
+    eng.register("m", model, params, task="node")
+    eng.register_host_graph("hg", host, fanouts=(None, None))
+    seeds = [12, 50_000, 99_999]
+    rid = eng.submit_nodes("m", seeds)
+    eng.drain()
+    out = eng.results[rid]
+
+    ref_eng = GnnServeEngine(cfg=CFG, slots=1)
+    ref_eng.register("m", model, params, task="node")
+    ref_rid = ref_eng.submit("m", full_graph_of(host))
+    ref_eng.drain()
+    ref = ref_eng.results[ref_rid][np.asarray(seeds)]
+    np.testing.assert_array_equal(out, ref)
+    # The whole point: the sampled request is orders of magnitude smaller
+    # than the graph it answers against.
+    assert eng.records[-1].sampled_nodes < nv // 50

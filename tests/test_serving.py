@@ -121,6 +121,90 @@ def test_feature_dim_bucketing_shares_host_shapes():
 # ---------------------------------------------------------------------------
 
 
+def test_pad_features_preserves_dtype():
+    """The padded buffer keeps the request dtype (f64 must not silently
+    downcast before it reaches the executor); non-float dtypes raise."""
+    g = make_graph(8, nv=20, ne=40)
+    pg = partition_graph(g, v=8, n=8)
+    bucket = bucket_for(pg, 7)
+    f32 = pad_features_to_bucket(pg, bucket, g.node_feat)
+    assert f32.dtype == np.float32
+    feat64 = g.node_feat.astype(np.float64) + 1e-12
+    f64 = pad_features_to_bucket(pg, bucket, feat64)
+    assert f64.dtype == np.float64
+    np.testing.assert_array_equal(f64[: g.num_nodes, :7], feat64)
+    f16 = pad_features_to_bucket(pg, bucket, g.node_feat.astype(np.float16))
+    assert f16.dtype == np.float16
+    with pytest.raises(TypeError):
+        pad_features_to_bucket(pg, bucket, g.node_feat.astype(np.int32))
+
+
+def test_content_hash_weight_dtype_is_significant():
+    """f64 weight vectors differing only beyond f32 precision must get
+    distinct cache keys (downcast-before-hash collided them)."""
+    g = make_graph(9, nv=16, ne=30)
+    w = np.random.default_rng(0).uniform(0.1, 1.0, g.num_edges)
+    w_eps = w + 1e-12
+    assert not np.array_equal(w, w_eps)
+    assert (w.astype(np.float32) == w_eps.astype(np.float32)).all()
+    assert graph_content_hash(g, 4, 4, edge_weights=w) != \
+        graph_content_hash(g, 4, 4, edge_weights=w_eps)
+    # Same values at different dtypes are different partitioner inputs too.
+    assert graph_content_hash(g, 4, 4, edge_weights=w) != \
+        graph_content_hash(g, 4, 4, edge_weights=w.astype(np.float32))
+    # Equal f32 inputs still collapse onto one key (the memoization point).
+    assert graph_content_hash(g, 4, 4, edge_weights=w.astype(np.float32)) == \
+        graph_content_hash(g, 4, 4,
+                           edge_weights=w.astype(np.float32).copy())
+    # The extra-bytes channel (sampled-serving host ids) keys too.
+    assert graph_content_hash(g, 4, 4) != \
+        graph_content_hash(g, 4, 4, extra=b"hosts")
+
+
+def test_cache_peek_touches_recency_without_stats():
+    cache = PreprocessCache(capacity=2)
+    g1, g2, g3 = (make_graph(40 + s, nv=12, ne=20) for s in range(3))
+    e1, _ = cache.get_or_partition(g1, 4, 4)
+    cache.get_or_partition(g2, 4, 4)
+    before = (cache.stats.hits, cache.stats.misses)
+    assert cache.peek(e1.key) is e1          # touch=True refreshes recency
+    assert cache.peek("missing") is None
+    assert (cache.stats.hits, cache.stats.misses) == before  # stats pure
+    cache.get_or_partition(g3, 4, 4)         # evicts g2, not the peeked g1
+    _, hit = cache.get_or_partition(g1, 4, 4)
+    assert hit
+    # touch=False observes without promoting.
+    cache2 = PreprocessCache(capacity=2)
+    e1, _ = cache2.get_or_partition(g1, 4, 4)
+    cache2.get_or_partition(g2, 4, 4)
+    assert cache2.peek(e1.key, touch=False) is e1
+    cache2.get_or_partition(g3, 4, 4)        # evicts g1: peek didn't touch
+    _, hit = cache2.get_or_partition(g1, 4, 4)
+    assert not hit
+
+
+def test_serving_touches_lru_no_resubmit_needed():
+    """Eviction-order regression: a structure that is *served* (hardware-
+    costed) stays hot in the LRU even when it is never resubmitted."""
+    model = build_model("gcn", 7, 2, hidden=4)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = single_model_engine(model, params, task="node",
+                              cfg=GhostConfig(v=8, n=8), slots=2,
+                              cache_capacity=2,
+                              spec=GnnModelSpec.gcn(7, 4, 2))
+    a = make_graph(50, nv=12, ne=20)
+    b = make_graph(51, nv=60, ne=160)   # different bucket -> its own group
+    c = make_graph(52, nv=30, ne=70)
+    eng.submit("m", a)
+    eng.submit("m", b)
+    served = eng.step()  # FIFO serves a's group only; hw-costing touches a
+    assert served == 1
+    eng.submit("m", c)   # capacity 2: must evict b (LRU), not the served a
+    _, hit = eng.cache.get_or_partition(a, 8, 8)
+    assert hit, "serving must refresh LRU recency for the served structure"
+    eng.drain()
+
+
 def test_content_hash_keys_structure_not_features():
     g1 = make_graph(0, nv=20, ne=40)
     g2 = Graph(edge_src=g1.edge_src.copy(), edge_dst=g1.edge_dst.copy(),
