@@ -53,7 +53,12 @@ from repro.core import (
 from repro.gnn import build_model
 from repro.launch.mesh import make_data_mesh
 from repro.photonic.perf import GhostConfig, GnnModelSpec
-from repro.serving import EngineRouter, GnnServeEngine, HostGraph
+from repro.serving import (
+    EngineRouter,
+    GnnServeEngine,
+    HostGraph,
+    make_scheduler,
+)
 
 
 def _graph_pool(count: int, f: int, seed: int) -> list[Graph]:
@@ -472,6 +477,169 @@ def run_node_queries(sizes=(10_000, 100_000, 1_000_000), queries: int = 48,
     })
 
 
+# ---------------------------------------------------------------------------
+# Overload ramp: open-loop Poisson arrivals against the always-on serve loop,
+# per arrival rate, per scheduler (fifo / occupancy / deadline).  The catalog
+# mixes a hot loose-SLO model with a rare tight-SLO model: FIFO makes the
+# tight straggler wait behind the hot backlog, occupancy starves its nearly
+# empty group until the age bound, and the deadline scheduler preempts on
+# slack — the attainment gap per rate is the ledger claim.  Arrival times are
+# pre-generated (one shared schedule per rate, fixed seed) and paced by
+# wall-clock sleeps; submission is non-blocking try_submit against a bounded
+# queue with deadline-aware shed, so each cell also records where the ramp
+# starts shedding.
+# ---------------------------------------------------------------------------
+
+
+def _poisson_schedule(rate_per_s: float, window_s: float, pools: dict,
+                      mix: dict, seed: int) -> list:
+    """[(arrival_s, model_id, graph)] for one open-loop window."""
+    rng = np.random.default_rng(seed)
+    mids = list(mix)
+    probs = np.array([mix[m] for m in mids])
+    schedule, t = [], 0.0
+    while True:
+        t += float(rng.exponential(1.0 / rate_per_s))
+        if t >= window_s:
+            return schedule
+        mid = mids[int(rng.choice(len(mids), p=probs))]
+        pool = pools[mid]
+        schedule.append((t, mid, pool[int(rng.integers(0, len(pool)))]))
+
+
+def _overload_cell(engine: GnnServeEngine, schedule, window_s: float) -> dict:
+    """Drive one (scheduler, rate) cell through the running serve loop."""
+    engine.reset_metrics()
+    engine.start()
+    t0 = time.perf_counter()
+    for arrival_s, mid, g in schedule:
+        lag = arrival_s - (time.perf_counter() - t0)
+        if lag > 0:
+            time.sleep(lag)
+        engine.try_submit(mid, g)     # open loop: overload sheds, never waits
+    engine.stop(drain=True)           # leftovers still count against SLOs
+    rep = engine.report(time.perf_counter() - t0)
+    att = rep.slo_attainment
+    return {
+        "offered": len(schedule),
+        "offered_rate_req_s": len(schedule) / window_s,
+        "served": rep.requests,
+        "req_per_s": rep.req_per_s,
+        "p99_latency_ms": rep.p99_latency_ms,
+        "mean_batch_size": rep.mean_batch_size,
+        "shed": rep.shed,
+        "rejected": rep.rejected,
+        "attainment": att.get("attainment", 0.0),
+        "attainment_per_model": {
+            m: v["attainment"] for m, v in att.get("per_model", {}).items()},
+        "p99_over_slo_per_model": {
+            m: v["p99_over_slo"] for m, v in att.get("per_model", {}).items()},
+    }
+
+
+def _overload_pool(count: int, nv: int, f: int, seed: int) -> list[Graph]:
+    """Fixed-size graphs (one bucket per model: two queue groups total)."""
+    rng = np.random.default_rng(seed)
+    pool = []
+    for _ in range(count):
+        ne = 6 * nv
+        pool.append(Graph(
+            edge_src=rng.integers(0, nv, ne).astype(np.int32),
+            edge_dst=rng.integers(0, nv, ne).astype(np.int32),
+            node_feat=rng.standard_normal((nv, f)).astype(np.float32),
+        ).validate())
+    return pool
+
+
+def run_overload(rates=(100, 200, 400, 800), window_s: float = 2.0,
+                 slots: int = 8, backend: str = "jnp",
+                 max_waiting: int = 64, hot_slo_ms: float = 250.0,
+                 tight_slo_ms: float = 30.0, tight_frac: float = 0.15,
+                 seed: int = 23) -> dict:
+    # Heavy enough that one batch costs ~10 ms on a CPU host: the default
+    # rate ramp then spans under-load (queue mostly empty, every scheduler
+    # attains) through near-capacity (queueing delay is the differentiator)
+    # into overload (the bounded queue sheds).
+    f, hidden, nv = 32, 128, 256
+    hot = build_model("gcn", f, 3, hidden=hidden)
+    tight = build_model("sage", f, 3, hidden=hidden)
+    ks = jax.random.split(jax.random.PRNGKey(6), 2)
+    hot_params, tight_params = hot.init(ks[0]), tight.init(ks[1])
+    pools = {
+        "hot_loose": _overload_pool(4, nv, f, seed=30),
+        "rare_tight": _overload_pool(4, nv, f, seed=31),
+    }
+    mix = {"hot_loose": 1.0 - tight_frac, "rare_tight": tight_frac}
+    # One shared arrival schedule per rate: every scheduler sees the exact
+    # same offered traffic.
+    schedules = {rate: _poisson_schedule(rate, window_s, pools, mix,
+                                         seed + int(rate))
+                 for rate in rates}
+
+    results: dict[str, dict] = {}
+    for scheduler in ("fifo", "occupancy", "deadline"):
+        if scheduler == "deadline":
+            # Urgency margin ~= one batch service time + a little headroom:
+            # preempting any earlier wastes occupancy, any later turns a
+            # meetable tight deadline into a miss.
+            policy = make_scheduler("deadline", urgent_slack_s=0.015)
+        else:
+            policy = scheduler
+        engine = GnnServeEngine(
+            cfg=GhostConfig(), slots=slots, backend=backend,
+            scheduler=policy, max_waiting=max_waiting,
+            admission_policy="shed-oldest")
+        engine.register("hot_loose", hot, hot_params, task="node",
+                        slo_ms=hot_slo_ms)
+        engine.register("rare_tight", tight, tight_params, task="node",
+                        slo_ms=tight_slo_ms)
+        for mid, pool in pools.items():     # warm-up: compile every trace
+            for g in pool:
+                engine.submit(mid, g)
+                engine.drain()
+        per_rate = {}
+        for rate in rates:
+            cell = _overload_cell(engine, schedules[rate], window_s)
+            per_rate[str(rate)] = cell
+            emit(f"serving/overload_{scheduler}_{rate}",
+                 0.0 if not cell["req_per_s"] else 1e6 / cell["req_per_s"],
+                 f"att={cell['attainment']:.3f};"
+                 f"p99={cell['p99_latency_ms']:.1f}ms;"
+                 f"shed={cell['shed']}")
+        results[scheduler] = per_rate
+
+    beats_at = [
+        rate for rate in rates
+        if (results["deadline"][str(rate)]["attainment"]
+            > results["fifo"][str(rate)]["attainment"]
+            and results["deadline"][str(rate)]["attainment"]
+            > results["occupancy"][str(rate)]["attainment"])
+    ]
+    first_shed = {
+        sched: next((rate for rate in rates
+                     if results[sched][str(rate)]["shed"] > 0), None)
+        for sched in results
+    }
+    return bench_json({
+        "bench": "serving_overload",
+        "rates_req_s": list(rates),
+        "window_s": window_s,
+        "slots": slots,
+        "backend": backend,
+        "max_waiting": max_waiting,
+        "admission_policy": "shed-oldest",
+        "slo_ms": {"hot_loose": hot_slo_ms, "rare_tight": tight_slo_ms},
+        "traffic_mix": mix,
+        "schedulers": results,
+        "deadline_beats_fifo_and_occupancy_at": beats_at,
+        "first_shed_rate": first_shed,
+        "note": "open-loop Poisson arrivals against the always-on serve "
+                "loop; identical offered schedule per rate across "
+                "schedulers; attainment is over served requests "
+                "(shed/rejected requests are counted separately)",
+    })
+
+
 def run(quick: bool = True, requests: int | None = None,
         working_set: int = 10, slots: int = 8, backend: str = "jnp",
         include_naive: bool = True, include_mixed: bool = True,
@@ -567,6 +735,15 @@ def main():
     ap.add_argument("--node-queries", action="store_true",
                     help="run ONLY the node-query (neighborhood-sampled) "
                          "sweep vs resident graph size")
+    ap.add_argument("--overload", action="store_true",
+                    help="run ONLY the open-loop Poisson overload ramp "
+                         "(fifo vs occupancy vs deadline SLO attainment)")
+    ap.add_argument("--rates", type=str, default="100,200,400,800",
+                    help="comma-separated arrival rates (req/s) for "
+                         "--overload")
+    ap.add_argument("--window", type=float, default=2.0,
+                    help="seconds of offered traffic per rate step for "
+                         "--overload")
     ap.add_argument("--sizes", type=str, default="10000,100000,1000000",
                     help="comma-separated host graph sizes for "
                          "--node-queries")
@@ -576,6 +753,13 @@ def main():
     if args.working_set < 1 or args.slots < 1 or (
             args.requests is not None and args.requests < 1):
         ap.error("--requests, --working-set and --slots must be >= 1")
+    if args.overload:
+        if args.window <= 0:
+            ap.error("--window must be positive")
+        rates = tuple(int(r) for r in args.rates.split(","))
+        run_overload(rates=rates, window_s=args.window, slots=args.slots,
+                     backend=args.backend, max_waiting=args.max_waiting)
+        return
     if args.device_scaling or args.router or args.node_queries:
         requests = args.requests or (16 if not args.full else 128)
         if args.device_scaling:

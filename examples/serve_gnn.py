@@ -28,6 +28,21 @@ asserts on:
   PYTHONPATH=src python examples/serve_gnn.py --node-queries \
       --host-nodes 200000 --requests 48
 
+Async loop: ``--async-loop`` starts the always-on background serve
+thread instead of the caller-driven tick loop — clients just
+``try_submit`` from any thread and ``stop(drain=True)`` at the end.  The
+catalog is registered with per-model SLOs (``slo_ms``), so the report
+gains the deadline-attainment line; pair with ``--scheduler deadline``
+to see EDF preemption protect tight-SLO models under load:
+
+  PYTHONPATH=src python examples/serve_gnn.py --async-loop \
+      --scheduler deadline --requests 60
+
+Multi-seed node queries: ``--seeds-per-query K`` batches K seed
+vertices into one request in ``--node-queries`` mode; the engine
+samples a single shared subgraph and slices one result row per seed —
+bit-exact with K solo submissions.
+
 Multi-device: ``--devices N`` builds a 1-D data mesh over the first N
 local devices (launch.mesh.make_data_mesh) and hands it to the engine;
 every executor trace then partitions its fp32 combine contractions across
@@ -66,28 +81,40 @@ def run_node_queries(args):
         scheduler=args.scheduler, max_waiting=args.max_waiting,
         admission_policy=args.admission_policy)
     engine.register("sage_host", sage, sage.init(jax.random.PRNGKey(0)),
-                    task="node", spec=GnnModelSpec.graphsage(f, 16, 4))
+                    task="node", spec=GnnModelSpec.graphsage(f, 16, 4),
+                    slo_ms=100.0 if args.async_loop else None)
     engine.register_host_graph("hg", host, fanouts=(8, 4), rng_seed=0)
 
     # Skewed seed stream: a small hot set dominates, so deterministic
     # resampling produces identical subgraphs that share cache entries.
+    # With --seeds-per-query K each request carries K seeds sampled as one
+    # shared subgraph; the result has one row per seed.
+    k = args.seeds_per_query
     rng = np.random.default_rng(1)
     hot = rng.permutation(host.num_nodes)[:max(8, args.requests // 6)]
-    seeds = hot[rng.integers(0, len(hot), args.requests)]
+    seeds = hot[rng.integers(0, len(hot), (args.requests, k))]
 
     t0 = time.perf_counter()
     rids = []
-    for i, seed in enumerate(seeds):
-        rids.append(engine.try_submit_nodes("sage_host", [int(seed)]))
-        if (i + 1) % args.slots == 0:
-            engine.step()
-    engine.drain()
+    if args.async_loop:
+        engine.start()
+        for row in seeds:
+            rids.append(engine.try_submit_nodes(
+                "sage_host", [int(s) for s in row]))
+        engine.stop(drain=True)
+    else:
+        for i, row in enumerate(seeds):
+            rids.append(engine.try_submit_nodes(
+                "sage_host", [int(s) for s in row]))
+            if (i + 1) % args.slots == 0:
+                engine.step()
+        engine.drain()
     report = engine.report(time.perf_counter() - t0)
 
     print(report.pretty())
     served = [rid for rid in rids if rid is not None]
     for rid in served[:1]:
-        assert engine.results[rid].shape == (1, 4)
+        assert engine.results[rid].shape == (k, 4)
     assert report.node_query_stats["queries"] == len(served)
     assert report.cache_hits > 0, \
         "hot-node stream must share subgraph-level cache entries"
@@ -102,8 +129,18 @@ def main():
                     help="distinct graphs per dataset the stream cycles over")
     ap.add_argument("--backend", choices=("jnp", "pallas", "pallas_fused"),
                     default="jnp")
-    ap.add_argument("--scheduler", choices=("fifo", "occupancy"),
+    ap.add_argument("--scheduler",
+                    choices=("fifo", "occupancy", "deadline"),
                     default="occupancy")
+    ap.add_argument("--async-loop", action="store_true",
+                    help="serve via the always-on background thread "
+                         "(start/try_submit/stop) instead of caller-driven "
+                         "ticks; registers per-model SLOs so the report "
+                         "shows deadline attainment")
+    ap.add_argument("--seeds-per-query", type=int, default=1,
+                    help="seed vertices per request in --node-queries mode "
+                         "(one shared sampled subgraph, one result row per "
+                         "seed)")
     ap.add_argument("--max-waiting", type=int, default=None,
                     help="admission bound on the waiting queue")
     ap.add_argument("--admission-policy", choices=("reject", "shed-oldest"),
@@ -127,6 +164,8 @@ def main():
         ap.error("--devices must be >= 1")
     if args.host_nodes < 100:
         ap.error("--host-nodes must be >= 100")
+    if args.seeds_per_query < 1:
+        ap.error("--seeds-per-query must be >= 1")
     if args.node_queries:
         run_node_queries(args)
         return
@@ -154,17 +193,23 @@ def main():
         cfg=cfg, slots=args.slots, backend=args.backend,
         scheduler=args.scheduler, max_waiting=args.max_waiting,
         admission_policy=args.admission_policy, mesh=mesh)
+    # Under --async-loop the catalog carries SLO contracts: the graph
+    # classifier is latency-tolerant, the node taggers are interactive.
+    slo = {"gin": 250.0, "gcn": 50.0, "sage": 100.0} if args.async_loop \
+        else {"gin": None, "gcn": None, "sage": None}
     engine.register("gin_mutag", gin, gin_params, task="graph",
                     spec=GnnModelSpec.gin(f_gin, 16, 2, mlp_layers=2),
-                    quantized=args.quantized, dataset_name="Mutag")
+                    quantized=args.quantized, dataset_name="Mutag",
+                    slo_ms=slo["gin"])
     engine.register("gcn_proteins", gcn,
                     gcn.init(jax.random.PRNGKey(1)), task="node",
                     spec=GnnModelSpec.gcn(f_node, 16, 2),
-                    prepare_fn=gcn_prepare, dataset_name="Proteins")
+                    prepare_fn=gcn_prepare, dataset_name="Proteins",
+                    slo_ms=slo["gcn"])
     engine.register("sage_proteins", sage,
                     sage.init(jax.random.PRNGKey(2)), task="node",
                     spec=GnnModelSpec.graphsage(f_node, 16, 2),
-                    dataset_name="Proteins")
+                    dataset_name="Proteins", slo_ms=slo["sage"])
 
     # Request stream: cycle hot working sets (repeat structures -> the
     # preprocessing cache earns its keep), mixing the catalog 2:1:1.
@@ -180,7 +225,15 @@ def main():
             mid = "gcn_proteins" if r < 0.75 else "sage_proteins"
             stream.append((mid,
                            proteins[int(rng.integers(0, len(proteins)))]))
-    if args.max_waiting is None:
+    if args.async_loop:
+        # Always-on loop: the background thread forms batches while
+        # clients submit; stop(drain=True) serves the tail before joining.
+        engine.start()
+        t0 = time.perf_counter()
+        rids = [engine.try_submit(mid, g) for mid, g in stream]
+        engine.stop(drain=True)
+        report = engine.report(time.perf_counter() - t0)
+    elif args.max_waiting is None:
         report = engine.run(stream)
         rids = list(range(len(stream)))
     else:

@@ -30,7 +30,12 @@ from repro.serving.registry import (
     ModelRegistry,
 )
 from repro.serving.router import EngineRouter
-from repro.serving.report import RequestRecord, ServeReport, build_report
+from repro.serving.report import (
+    RequestRecord,
+    ServeReport,
+    build_report,
+    slo_attainment_from,
+)
 from repro.serving.sampler import (
     HostGraph,
     SampleResult,
@@ -39,6 +44,7 @@ from repro.serving.sampler import (
 )
 from repro.serving.scheduler import (
     SCHEDULERS,
+    DeadlineScheduler,
     FifoScheduler,
     GroupState,
     OccupancyScheduler,

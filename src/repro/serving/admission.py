@@ -9,10 +9,27 @@ what happens at the cap:
                         ``try_submit(...) -> None`` or ``QueueFullError``
                         from ``submit``); backpressure lands on the newest
                         traffic.
-  * ``"shed-oldest"`` — the oldest waiting request is dropped to make room;
-                        the new request is admitted.  Sheds load from the
-                        stalest work instead (its rid never produces a
-                        result; the engine lists it in ``shed_rids``).
+  * ``"shed-oldest"`` — one waiting request is dropped to make room and
+                        the new request is admitted (its rid never
+                        produces a result; the engine lists it in
+                        ``shed_rids``).  The engine picks the victim with
+                        the **least salvageable slack**: the waiting
+                        request whose SLO deadline is nearest (or most
+                        blown) loses — dropping it forfeits the least
+                        remaining chance of an on-time answer.  In a
+                        catalog without SLOs every deadline is infinite
+                        and the tie-break is submission order, i.e. the
+                        historical shed-oldest behavior, which is what
+                        the policy name still records.
+
+Concurrency: the controller itself holds no lock — ``decide`` mutates
+``stats`` in place.  The engine serializes every call under its intake
+lock, *in the same critical section as the queue mutation it gates*, so
+the admitted count can never overshoot ``max_waiting`` when many client
+threads submit concurrently.  ``try_reject_early`` exists so the reject
+fast path can turn a request away before the engine pays preprocessing
+for it; the authoritative decision is still the later ``decide`` call
+(the queue may have filled — or drained — in between).
 
 ``AdmissionStats`` (admitted / rejected / shed) is folded into the serve
 report so reject and shed rates are first-class serving metrics.
@@ -42,7 +59,11 @@ class AdmissionStats:
 
 
 class AdmissionController:
-    """Bounded-queue gatekeeper; ``decide`` also maintains the stats."""
+    """Bounded-queue gatekeeper; ``decide`` also maintains the stats.
+
+    Not internally locked: callers (the engine) must serialize ``decide``
+    with the queue mutation it authorizes.
+    """
 
     def __init__(self, max_waiting: Optional[int] = None,
                  policy: str = "reject"):
@@ -55,11 +76,26 @@ class AdmissionController:
         self.policy = policy
         self.stats = AdmissionStats()
 
+    def try_reject_early(self, queued: int) -> bool:
+        """Reject-and-count when the queue is full under the reject policy.
+
+        The preprocessing fast-out: a request the queue has no room for
+        should not pay partitioning first.  Returns True (and counts the
+        rejection) only when ``decide`` would certainly reject right now;
+        shed policies never reject, so they never take this path.
+        """
+        if (self.max_waiting is not None and self.policy == "reject"
+                and queued >= self.max_waiting):
+            self.stats.rejected += 1
+            return True
+        return False
+
     def decide(self, queued: int) -> str:
         """'admit' | 'reject' | 'shed' for one offered request.
 
-        'shed' means: admit the new request after the caller drops the
-        oldest waiting one (both counters move).
+        'shed' means: admit the new request after the caller drops one
+        waiting victim (both counters move).  Must be called in the same
+        critical section as the enqueue it authorizes.
         """
         if self.max_waiting is None or queued < self.max_waiting:
             self.stats.admitted += 1

@@ -15,12 +15,24 @@ dict that the engine uses to memoize downstream per-structure artifacts
 (the structural shape bucket, bucket-padded tile arrays, and per-model
 analytic hardware cost under ``("hw", model_id)`` keys), all invariant
 under the same key.
+
+Thread safety: the cache carries its own internal lock — many client
+threads preprocess concurrently on the async submit path, *outside* the
+engine's intake lock (partitioning is the expensive step; serializing it
+behind the intake lock would make every submit pay every other submit's
+partitioning).  The lock is held across ``partition_graph`` on a miss, so
+concurrent submits of the same structure dedupe onto one partitioning run
+instead of racing to insert N identical entries.  ``extras`` mutation by
+the engine happens under the engine's own lock; the two locks are never
+held simultaneously (cache calls never nest inside engine critical
+sections and vice versa), so no lock-order deadlock is possible.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import hashlib
+import threading
 from collections import OrderedDict
 from typing import Optional
 
@@ -96,9 +108,11 @@ class PreprocessCache:
         self.capacity = capacity
         self._entries: OrderedDict[str, CacheEntry] = OrderedDict()
         self.stats = CacheStats()
+        self._lock = threading.Lock()
 
     def __len__(self) -> int:
-        return len(self._entries)
+        with self._lock:
+            return len(self._entries)
 
     def peek(self, key: str, touch: bool = True) -> Optional[CacheEntry]:
         """Look up an entry by key without counting a hit or miss.
@@ -110,10 +124,11 @@ class PreprocessCache:
         are untouched either way — hit/miss rates measure submit-path
         memoization only.
         """
-        entry = self._entries.get(key)
-        if entry is not None and touch:
-            self._entries.move_to_end(key)
-        return entry
+        with self._lock:
+            entry = self._entries.get(key)
+            if entry is not None and touch:
+                self._entries.move_to_end(key)
+            return entry
 
     def get_or_partition(
         self,
@@ -136,20 +151,24 @@ class PreprocessCache:
         submitted) structure.
         """
         key = graph_content_hash(graph, v, n, edge_weights, salt, extra)
-        entry = self._entries.get(key)
-        if entry is not None:
-            self.stats.hits += 1
-            self._entries.move_to_end(key)
-            return entry, True
-        self.stats.misses += 1
-        executed = graph
-        if transform is not None:
-            executed, edge_weights = transform(graph)
-        pg = partition_graph(executed, v=v, n=n, edge_weights=edge_weights)
-        entry = CacheEntry(key=key, pg=pg)
-        entry.extras["graph"] = executed
-        self._entries[key] = entry
-        if len(self._entries) > self.capacity:
-            self._entries.popitem(last=False)
-            self.stats.evictions += 1
-        return entry, False
+        with self._lock:
+            entry = self._entries.get(key)
+            if entry is not None:
+                self.stats.hits += 1
+                self._entries.move_to_end(key)
+                return entry, True
+            # Partition while holding the lock: concurrent submits of the
+            # same structure dedupe onto this run instead of all missing.
+            self.stats.misses += 1
+            executed = graph
+            if transform is not None:
+                executed, edge_weights = transform(graph)
+            pg = partition_graph(executed, v=v, n=n,
+                                 edge_weights=edge_weights)
+            entry = CacheEntry(key=key, pg=pg)
+            entry.extras["graph"] = executed
+            self._entries[key] = entry
+            if len(self._entries) > self.capacity:
+                self._entries.popitem(last=False)
+                self.stats.evictions += 1
+            return entry, False

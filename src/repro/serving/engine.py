@@ -6,45 +6,75 @@ one substrate — the serving-side analogue of GHOST's versatility claim
 (paper Section 4.1).  The engine is a thin orchestrator over four seams:
 
   registry + executor pool (serving/registry.py)
-      named ``ModelEntry`` catalog; one jit trace per ``(model_id, bucket)``
-      so the compilation count stays bounded at |models| x |buckets|.
+      named ``ModelEntry`` catalog (each optionally carrying an ``slo_ms``
+      latency contract); one jit trace per ``(model_id, bucket)`` so the
+      compilation count stays bounded at |models| x |buckets|.
   scheduler (serving/scheduler.py)
       requests wait grouped by ``(model_id, bucket)``; a pluggable policy
-      (head-of-line FIFO, or occupancy-aware with an age-based
-      anti-starvation bound) picks the group each tick.
+      (head-of-line FIFO, occupancy-greedy with a wall-clock
+      anti-starvation bound, or SLO-aware EDF/least-slack deadline
+      scheduling) picks the group each serve iteration.
   admission control (serving/admission.py)
-      optional bound on the waiting queue with reject / shed-oldest
-      overload policies; outcomes surface in the serve report.
+      optional bound on the waiting queue with reject / shed overload
+      policies (the shed victim is the waiting request with the least
+      salvageable slack); outcomes surface in the serve report.
   preprocessing cache (serving/cache.py)
       partition + fetch order generated once per distinct structure
       (paper Section 3.4.1) and shared across every model in the catalog
       that uses the same prepare transform.
 
-Each tick gathers up to ``slots`` waiting requests from the chosen group,
-stacks their bucket-padded tile arrays into ``[R, B, V, N]`` (features into
-``[R, rows, bucket.f]``), and runs one vmapped blocked forward — via the
-jnp oracle, the unfused Pallas ``block_spmm`` kernel, or the fused
-aggregate+combine ``fused_block_spmm`` kernel with combination-order
-planning (``backend="pallas_fused"``; interpret mode on CPU).
+Each serve iteration gathers up to ``slots`` waiting requests from the
+chosen group, stacks their bucket-padded tile arrays into ``[R, B, V, N]``
+(features into ``[R, rows, bucket.f]``), and runs one vmapped blocked
+forward — via the jnp oracle, the unfused Pallas ``block_spmm`` kernel, or
+the fused aggregate+combine ``fused_block_spmm`` kernel with
+combination-order planning (``backend="pallas_fused"``; interpret mode on
+CPU).
+
+Two driving modes share every scheduling/execution code path:
+
+  tick-driven (the original mode, still what tests and closed-loop
+      benchmarks use): the caller invokes ``step()``/``drain()``/``run()``
+      and nothing happens between calls.
+  always-on (``start()``): a background serve thread forms and executes
+      batches continuously while any number of client threads call
+      ``submit``/``try_submit``/``submit_nodes`` concurrently; results are
+      picked up with the blocking ``result(rid)`` (or non-blocking
+      ``take_result``), and ``stop(drain=True)`` joins the loop and
+      serves out the remaining queue.  ``step`` and ``run`` refuse to run
+      while the loop owns batch formation.
+
+Concurrency model: one ``threading.Condition`` guards all queue/result/
+metric state.  Batch *extraction* and result *writeback* happen under the
+lock; the expensive parts — preprocessing (the cache carries its own
+internal lock) and executor calls — happen outside it, so submitters are
+never blocked behind a device call.  Admission decisions are taken inside
+the same critical section as the queue mutation they authorize, so the
+waiting bound cannot overshoot under concurrent submitters.  The engine
+lock and the cache lock are never held simultaneously.
 
 Executor numerics: zero padding tiles, rows, and feature columns are exact
 no-ops (see serving/bucketing.py; executors slice features back to the
 model's true ``f_in`` inside the trace), so per-request outputs match the
 per-model unbatched *jitted* ``model.apply_blocked`` value-for-value at
-fp32, for every model in the catalog.  (Eager, un-jitted execution can
-differ from any jitted run by 1 ULP in GAT's softmax — XLA fuses the
-exp/divide chain differently — so the jitted unbatched forward is the
-reference; batching and bucket padding themselves add no drift.)
+fp32, for every model in the catalog, *regardless of batch composition* —
+which is also why the always-on loop is bit-exact with the tick loop for
+an identical request set.  (Eager, un-jitted execution can differ from any
+jitted run by 1 ULP in GAT's softmax — XLA fuses the exp/divide chain
+differently — so the jitted unbatched forward is the reference; batching
+and bucket padding themselves add no drift.)
 
 Latency accounting uses ``time.perf_counter()`` (monotonic) throughout —
 ``time.time()`` can step backwards under clock adjustment and produce
-negative latencies.
+negative latencies.  SLO deadlines are absolute perf_counter instants
+(``t_submit + slo_ms/1e3``).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import math
+import threading
 import time
 from collections import OrderedDict, deque
 from typing import Optional, Sequence
@@ -100,7 +130,9 @@ class _Pending:
     feat: np.ndarray        # [Gs_p * N, bucket.f]
     t_submit: float         # perf_counter at submission
     seq: int                # global submission order (FIFO age)
-    submit_tick: int        # engine tick at submission (starvation age)
+    submit_tick: int        # serve iteration at submission (legacy age)
+    slo_ms: float = 0.0     # model's latency contract (0 = none)
+    deadline_s: float = math.inf  # absolute perf_counter deadline
     # Node-query (neighborhood-sampled) requests only:
     seed_rows: Optional[np.ndarray] = None  # local rows to slice results to
     num_seeds: int = 0
@@ -114,7 +146,9 @@ class GnnServeEngine:
     """Continuous batching over blocked GNN forwards for a model catalog.
 
     Construct, ``register`` one model per catalog entry, then ``submit``
-    ``(model_id, graph)`` requests (or call ``run`` on a stream of them).
+    ``(model_id, graph)`` requests — tick-driven via ``step``/``drain``/
+    ``run``, or against the always-on loop between ``start()`` and
+    ``stop()``.
 
     Args:
       cfg: GhostConfig — supplies the (V, N) partition group sizes (shared
@@ -127,10 +161,12 @@ class GnnServeEngine:
         "pallas_fused" (fused aggregate+combine epilogue kernel with
         combination-order planning) for SUM/MEAN aggregation (MAX and
         attention always take the jnp path inside the trace).
-      scheduler: "fifo" | "occupancy" | a Scheduler instance.
+      scheduler: "fifo" | "occupancy" | "deadline" | a Scheduler instance.
       max_waiting: bound on the waiting queue (None = unbounded).
       admission_policy: "reject" (turn the new request away) or
-        "shed-oldest" (drop the stalest waiting request to make room).
+        "shed-oldest" (drop the waiting request with the least salvageable
+        slack — submission order when no model carries an SLO — to make
+        room).
       cache_capacity: LRU capacity of the preprocessing cache.
       tuner: optional ``kernels.autotune.Autotuner`` (duck-typed: needs
         ``resolve(site)`` + ``live_configs()``); the executor pool resolves
@@ -181,11 +217,21 @@ class GnnServeEngine:
         self.results: dict[int, np.ndarray] = {}
         self.records: list[RequestRecord] = []
         self.shed_rids: list[int] = []
+        self._shed_set: set[int] = set()
         self._groups: "OrderedDict[tuple, deque[_Pending]]" = OrderedDict()
         self._next_rid = 0
         self._seq = 0
         self._tick = 0
+        self._num_waiting = 0
+        self._inflight = 0
         self._max_dropped_wait_ticks = 0
+        self._max_dropped_wait_s = 0.0
+        # One condition guards all mutable engine state above; see the
+        # module docstring for what runs inside vs outside it.
+        self._cond = threading.Condition()
+        self._thread: Optional[threading.Thread] = None
+        self._running = False
+        self._loop_error: Optional[BaseException] = None
 
     # ------------------------------------------------------------------
     # Catalog.
@@ -218,17 +264,25 @@ class GnnServeEngine:
                                    rng_seed=rng_seed)
 
     # ------------------------------------------------------------------
-    # Request intake.
+    # Request intake (safe from any number of client threads).
     # ------------------------------------------------------------------
 
     @property
     def num_waiting(self) -> int:
-        return sum(len(dq) for dq in self._groups.values())
+        with self._cond:
+            return self._num_waiting
+
+    @property
+    def running(self) -> bool:
+        """True while the always-on serve loop owns batch formation."""
+        with self._cond:
+            return self._running
 
     def try_submit(self, model_id: str, graph: Graph) -> Optional[int]:
         """Preprocess (cached) and enqueue one request.
 
         Returns the rid, or None when admission control rejected it.
+        Safe to call concurrently from many client threads.
         """
         entry_m = self.registry[model_id]
         f = graph.node_feat.shape[1]
@@ -236,65 +290,82 @@ class GnnServeEngine:
             raise ValueError(
                 f"model '{model_id}' expects {entry_m.f_in} features, "
                 f"request carries {f}")
-        verdict = self.admission.decide(self.num_waiting)
-        if verdict == "reject":
-            return None
+        # Fast path: a request the full queue will certainly reject should
+        # not pay preprocessing first.  The authoritative decision is the
+        # decide() inside _enqueue — atomic with the queue mutation.
+        with self._cond:
+            if self.admission.try_reject_early(self._num_waiting):
+                return None
         t0 = time.perf_counter()
-        return self._enqueue(model_id, graph, verdict, t0,
+        return self._enqueue(model_id, graph, t0,
                              transform=entry_m.prepare_fn,
-                             salt=entry_m.salt)
+                             salt=entry_m.salt, slo_ms=entry_m.slo_ms)
 
-    def _enqueue(self, model_id: str, graph: Graph, verdict: str, t0: float,
+    def _enqueue(self, model_id: str, graph: Graph, t0: float,
                  *, transform, salt: str, extra: bytes = b"",
-                 nq: Optional[dict] = None) -> int:
-        """Preprocess (cached) and enqueue one admitted request."""
-        try:
-            centry, hit = self.cache.get_or_partition(
-                graph, self.cfg.v, self.cfg.n,
-                transform=transform, salt=salt, extra=extra)
-            pg = centry.pg
-            shape = centry.extras.get("shape")
-            if shape is None:
-                # Structural artifacts are feature-width-independent: cache
-                # the f=1 bucket + padded tile arrays once per structure and
-                # derive the request's full bucket from its feature width.
-                shape = centry.extras["shape"] = bucket_for(pg)
-                centry.extras["padded"] = pad_partition_to_bucket(pg, shape)
-            bucket = dataclasses.replace(
-                shape, f=next_pow2(graph.node_feat.shape[1]))
-            blocks, row, col = centry.extras["padded"]
-            feat = pad_features_to_bucket(pg, bucket, graph.node_feat)
-        except Exception:
-            # Preprocessing failed: this admission never happened.  Roll the
-            # stats back; crucially, no waiting victim has been shed yet.
-            self.admission.stats.admitted -= 1
+                 slo_ms: Optional[float] = None,
+                 nq: Optional[dict] = None) -> Optional[int]:
+        """Preprocess (cached, outside the engine lock), then atomically
+        admit + enqueue.  Returns the rid, or None on rejection.
+
+        Preprocessing precedes the admission decision, so a preprocessing
+        failure needs no stats rollback and can never cost a waiting
+        victim its slot.
+        """
+        centry, hit = self.cache.get_or_partition(
+            graph, self.cfg.v, self.cfg.n,
+            transform=transform, salt=salt, extra=extra)
+        pg = centry.pg
+        shape = centry.extras.get("shape")
+        if shape is None:
+            # Structural artifacts are feature-width-independent: cache
+            # the f=1 bucket + padded tile arrays once per structure and
+            # derive the request's full bucket from its feature width.
+            # Concurrent submitters may duplicate this work (deterministic,
+            # identical values); "padded" is published before "shape" so a
+            # reader that observes shape always finds padded.
+            shape = bucket_for(pg)
+            centry.extras["padded"] = pad_partition_to_bucket(pg, shape)
+            centry.extras["shape"] = shape
+        bucket = dataclasses.replace(
+            shape, f=next_pow2(graph.node_feat.shape[1]))
+        blocks, row, col = centry.extras["padded"]
+        feat = pad_features_to_bucket(pg, bucket, graph.node_feat)
+        deadline = (t0 + slo_ms / 1e3 if slo_ms else math.inf)
+        with self._cond:
+            verdict = self.admission.decide(self._num_waiting)
+            if verdict == "reject":
+                return None
             if verdict == "shed":
-                self.admission.stats.shed -= 1
-            raise
-        if verdict == "shed":
-            # Shed only now, once the replacement request is viable.
-            self._shed_oldest()
-        rid = self._next_rid
-        self._next_rid += 1
-        pending = _Pending(
-            rid=rid,
-            model_id=model_id,
-            graph=graph,
-            bucket=bucket,
-            cache_key=centry.key,
-            cache_hit=hit,
-            blocks=blocks,
-            block_row=row,
-            block_col=col,
-            feat=feat,
-            t_submit=t0,
-            seq=self._seq,
-            submit_tick=self._tick,
-            **(nq or {}),
-        )
-        self._seq += 1
-        self._groups.setdefault((model_id, bucket), deque()).append(pending)
-        return rid
+                # Shed only now, with the replacement request viable and
+                # the queue still at its bound (same critical section).
+                self._shed_victim_locked()
+            rid = self._next_rid
+            self._next_rid += 1
+            pending = _Pending(
+                rid=rid,
+                model_id=model_id,
+                graph=graph,
+                bucket=bucket,
+                cache_key=centry.key,
+                cache_hit=hit,
+                blocks=blocks,
+                block_row=row,
+                block_col=col,
+                feat=feat,
+                t_submit=t0,
+                seq=self._seq,
+                submit_tick=self._tick,
+                slo_ms=float(slo_ms) if slo_ms else 0.0,
+                deadline_s=deadline,
+                **(nq or {}),
+            )
+            self._seq += 1
+            self._groups.setdefault((model_id, bucket),
+                                    deque()).append(pending)
+            self._num_waiting += 1
+            self._cond.notify_all()
+            return rid
 
     def submit(self, model_id: str, graph: Graph) -> int:
         """Like try_submit, but raises QueueFullError on rejection."""
@@ -318,14 +389,19 @@ class GnnServeEngine:
 
         The million-node intake path: ``seed_ids`` are vertex ids in the
         registered ``HostGraph`` (``host=`` names it; omit when exactly one
-        is registered).  The engine samples the seeds' k-hop in-neighborhood
-        (``fanouts``/``rng_seed`` default to the host entry's policy), runs
-        the sampled subgraph through the ordinary cache / bucketing /
-        executor machinery — identical samples content-hash to one
-        partition entry, the hot-node fast path — and slices the result to
-        the seed rows (in ``seed_ids`` order).
+        is registered).  A multi-seed batch is sampled as **one shared
+        subgraph** — one partitioning, one executor slot — and the result
+        rows come back sliced per seed, in ``seed_ids`` order, bit-exact
+        with each seed's solo submission whenever the sampling hops cover
+        the model depth (see serving/sampler.py).  The engine samples the
+        seeds' k-hop in-neighborhood (``fanouts``/``rng_seed`` default to
+        the host entry's policy), runs the sampled subgraph through the
+        ordinary cache / bucketing / executor machinery — identical
+        samples content-hash to one partition entry, the hot-node fast
+        path — and slices the result to the seed rows.
 
         Returns the rid, or None when admission control rejected it.
+        Safe to call concurrently from many client threads.
         """
         entry_m = self.registry[model_id]
         if entry_m.task != "node":
@@ -345,26 +421,20 @@ class GnnServeEngine:
             raise ValueError(
                 f"model '{model_id}' expects {entry_m.f_in} features, host "
                 f"graph '{hentry.name}' carries {hg.num_features}")
-        verdict = self.admission.decide(self.num_waiting)
-        if verdict == "reject":
-            return None
+        with self._cond:
+            if self.admission.try_reject_early(self._num_waiting):
+                return None
         t0 = time.perf_counter()
-        try:
-            use_fanouts = (hentry.fanouts if fanouts is None
-                           else tuple(fanouts))
-            use_seed = (hentry.rng_seed if rng_seed is None
-                        else int(rng_seed))
-            # lcm(V, N)-aligned local numbering: sampled tiles become
-            # bitwise restrictions of the full graph's (module docstring of
-            # serving/sampler.py), which is what makes full-fanout samples
-            # reproduce the full forward bit-exactly at the seeds.
-            sample = sample_khop(hg, seed_ids, use_fanouts, use_seed,
-                                 align=math.lcm(self.cfg.v, self.cfg.n))
-        except Exception:
-            self.admission.stats.admitted -= 1
-            if verdict == "shed":
-                self.admission.stats.shed -= 1
-            raise
+        use_fanouts = (hentry.fanouts if fanouts is None
+                       else tuple(fanouts))
+        use_seed = (hentry.rng_seed if rng_seed is None
+                    else int(rng_seed))
+        # lcm(V, N)-aligned local numbering: sampled tiles become
+        # bitwise restrictions of the full graph's (module docstring of
+        # serving/sampler.py), which is what makes full-fanout samples
+        # reproduce the full forward bit-exactly at the seeds.
+        sample = sample_khop(hg, seed_ids, use_fanouts, use_seed,
+                             align=math.lcm(self.cfg.v, self.cfg.n))
         t_sampled = time.perf_counter()
         spf = entry_m.sample_prepare_fn
         # The transform closes over this sample's host vertices (their host
@@ -384,10 +454,10 @@ class GnnServeEngine:
                                   for f in use_fanouts),
         )
         return self._enqueue(
-            model_id, sample.graph, verdict, t0,
+            model_id, sample.graph, t0,
             transform=transform,
             salt=f"{entry_m.sample_salt}:{hg.fingerprint}",
-            extra=extra, nq=nq)
+            extra=extra, slo_ms=entry_m.slo_ms, nq=nq)
 
     def submit_nodes(self, model_id: str, seed_ids: Sequence[int],
                      **kwargs) -> int:
@@ -399,33 +469,50 @@ class GnnServeEngine:
                 f"admission policy is '{self.admission.policy}'")
         return rid
 
-    def _shed_oldest(self) -> None:
-        key, dq = min(self._groups.items(), key=lambda kv: kv[1][0].seq)
+    def _shed_victim_locked(self) -> None:
+        """Drop the waiting request with the least salvageable slack.
+
+        Group heads suffice: within one group (one model, so one SLO;
+        FIFO arrival) the head has the earliest deadline and the lowest
+        seq.  Without SLOs every deadline is infinite and the seq
+        tie-break reproduces the historical shed-oldest behavior.
+        """
+        key, dq = min(self._groups.items(),
+                      key=lambda kv: (kv[1][0].deadline_s, kv[1][0].seq))
         victim = dq.popleft()
         if not dq:
             del self._groups[key]
+        self._num_waiting -= 1
         self.shed_rids.append(victim.rid)
-        # The victim's wait counts toward the starvation gauge: a policy
+        self._shed_set.add(victim.rid)
+        # The victim's wait counts toward the starvation gauges: a policy
         # that quietly dropped its stalest work must not look starvation-free.
         self._max_dropped_wait_ticks = max(
             self._max_dropped_wait_ticks, self._tick - victim.submit_tick)
+        self._max_dropped_wait_s = max(
+            self._max_dropped_wait_s,
+            time.perf_counter() - victim.t_submit)
+        self._cond.notify_all()  # wake any result(victim.rid) waiter
 
     # ------------------------------------------------------------------
-    # Engine ticks.
+    # Batch formation + execution (shared by both driving modes).
     # ------------------------------------------------------------------
 
-    def step(self) -> int:
-        """Serve one batch from the scheduler-chosen (model, bucket) group.
+    def _extract_locked(self):
+        """Pop the scheduler-chosen batch.  Caller holds the lock.
 
-        Returns the number of requests served (0 when the queue is empty).
+        Returns ``(key, batch, serve_tick, t_extract)`` or None when the
+        queue is empty.
         """
         if not self._groups:
-            return 0
+            return None
         now = time.perf_counter()
         states = [
             GroupState(key=key, size=len(dq), head_seq=dq[0].seq,
                        head_wait_ticks=self._tick - dq[0].submit_tick,
-                       head_age_s=now - dq[0].t_submit)
+                       head_age_s=now - dq[0].t_submit,
+                       head_deadline_s=dq[0].deadline_s,
+                       head_slack_s=dq[0].deadline_s - now)
             for key, dq in self._groups.items()
         ]
         key = self.scheduler.select(states, self.slots)
@@ -435,9 +522,14 @@ class GnnServeEngine:
         batch = [dq.popleft() for _ in range(min(self.slots, len(dq)))]
         if not dq:
             del self._groups[key]
+        self._num_waiting -= len(batch)
+        self._inflight += len(batch)
         serve_tick = self._tick
         self._tick += 1
+        return key, batch, serve_tick, now
 
+    def _execute(self, key, batch, serve_tick: int, t_extract: float) -> int:
+        """Run one extracted batch and write results back under the lock."""
         model_id, bucket = key
         entry = self.registry[model_id]
         r = self.slots
@@ -456,29 +548,36 @@ class GnnServeEngine:
         out = np.asarray(jax.block_until_ready(out))
         t_done = time.perf_counter()
 
+        results: dict[int, np.ndarray] = {}
+        records: list[RequestRecord] = []
         for i, p in enumerate(batch):
             valid = out[i][: p.graph.num_nodes]
             if entry.task == "node":
                 # Node queries answer only their seed rows (in query order);
                 # whole-graph requests deliver every row.
-                self.results[p.rid] = (valid if p.seed_rows is None
-                                       else valid[p.seed_rows])
+                results[p.rid] = (valid if p.seed_rows is None
+                                  else valid[p.seed_rows])
             else:
-                self.results[p.rid] = np.asarray(
+                results[p.rid] = np.asarray(
                     entry.model.readout(entry.params, jnp.asarray(valid)))
             hw_lat, hw_e = self._hardware_cost(entry, p)
-            self.records.append(RequestRecord(
+            latency = t_done - p.t_submit
+            records.append(RequestRecord(
                 rid=p.rid,
                 model_id=model_id,
                 num_nodes=p.graph.num_nodes,
                 num_edges=p.graph.num_edges,
                 bucket=bucket.describe(),
                 cache_hit=p.cache_hit,
-                latency_s=t_done - p.t_submit,
+                latency_s=latency,
                 batch_size=len(batch),
                 wait_ticks=serve_tick - p.submit_tick,
+                wait_s=t_extract - p.t_submit,
                 hw_latency_s=hw_lat,
                 hw_energy_j=hw_e,
+                slo_ms=p.slo_ms,
+                deadline_s=p.deadline_s,
+                slo_met=(latency * 1e3 <= p.slo_ms if p.slo_ms else None),
                 node_query=p.seed_rows is not None,
                 num_seeds=p.num_seeds,
                 sample_s=p.sample_s,
@@ -486,7 +585,192 @@ class GnnServeEngine:
                 sampled_edges=p.sampled_edges,
                 fanouts=p.fanouts_desc,
             ))
+        with self._cond:
+            self.results.update(results)
+            self.records.extend(records)
+            self._inflight -= len(batch)
+            self._cond.notify_all()
         return len(batch)
+
+    def step(self) -> int:
+        """Serve one batch from the scheduler-chosen (model, bucket) group.
+
+        Tick-driven mode only — raises while the always-on loop is
+        running (the loop owns batch formation; submit and pick results
+        up instead).  Returns the number of requests served (0 when the
+        queue is empty).
+        """
+        with self._cond:
+            if self._running:
+                raise RuntimeError(
+                    "engine loop is running; step() is tick-driven mode — "
+                    "submit requests and pick up results instead")
+            extracted = self._extract_locked()
+        if extracted is None:
+            return 0
+        return self._execute(*extracted)
+
+    def _serve_loop(self) -> None:
+        try:
+            while True:
+                with self._cond:
+                    while self._running and not self._groups:
+                        self._cond.wait(timeout=0.05)
+                    if not self._running:
+                        return
+                    extracted = self._extract_locked()
+                if extracted is not None:
+                    self._execute(*extracted)
+        except BaseException as e:  # noqa: BLE001 — surfaced to clients
+            with self._cond:
+                self._loop_error = e
+                self._running = False
+                self._cond.notify_all()
+
+    # ------------------------------------------------------------------
+    # Always-on loop lifecycle.
+    # ------------------------------------------------------------------
+
+    def start(self) -> "GnnServeEngine":
+        """Start the background serve thread (idempotent calls raise).
+
+        After start, any number of client threads may submit concurrently;
+        batches form and execute continuously.  Pair with ``stop()``.
+        """
+        with self._cond:
+            if self._thread is not None:
+                raise RuntimeError("serve loop already running")
+            self._running = True
+            self._loop_error = None
+            self._thread = threading.Thread(
+                target=self._serve_loop, name="gnn-serve-loop", daemon=True)
+            self._thread.start()
+        return self
+
+    def stop(self, drain: bool = True) -> None:
+        """Join the serve loop; by default serve out the remaining queue.
+
+        ``drain=False`` leaves unserved requests waiting (a later
+        ``drain()``/``step()``/``start()`` can still serve them).
+        Re-raises a serve-loop crash, if one happened.
+        """
+        with self._cond:
+            self._running = False
+            self._cond.notify_all()
+            t, self._thread = self._thread, None
+        if t is not None:
+            t.join()
+        with self._cond:
+            err = self._loop_error
+        if err is not None:
+            raise RuntimeError("serve loop failed") from err
+        if drain:
+            self.drain()
+
+    def drain(self) -> int:
+        """Serve until the queue is empty; returns requests served.
+
+        With the loop running this blocks until the loop has emptied the
+        queue and finished in-flight batches (the loop does the serving);
+        tick-driven it serves synchronously.
+        """
+        with self._cond:
+            if self._running:
+                before = len(self.records)
+                while ((self._num_waiting or self._inflight)
+                       and self._running and self._loop_error is None):
+                    self._cond.wait(timeout=0.1)
+                if self._loop_error is not None:
+                    raise RuntimeError(
+                        "serve loop failed") from self._loop_error
+                return len(self.records) - before
+        total = 0
+        while True:
+            served = self.step()
+            if not served:
+                return total
+            total += served
+
+    # ------------------------------------------------------------------
+    # Result pickup.
+    # ------------------------------------------------------------------
+
+    def result(self, rid: int, timeout: Optional[float] = None) -> np.ndarray:
+        """Blocking pickup: wait for ``rid`` and pop its result.
+
+        Raises KeyError when the request was shed (or, with the loop
+        stopped and the queue idle, when the rid is unknown/already
+        taken); TimeoutError when ``timeout`` seconds elapse first;
+        RuntimeError when the serve loop crashed.  Note an unknown rid
+        against a *running* loop waits until the timeout.
+        """
+        deadline = (None if timeout is None
+                    else time.perf_counter() + timeout)
+        with self._cond:
+            while True:
+                if rid in self.results:
+                    return self.results.pop(rid)
+                if rid in self._shed_set:
+                    raise KeyError(
+                        f"request {rid} was shed by admission control")
+                if self._loop_error is not None:
+                    raise RuntimeError(
+                        "serve loop failed") from self._loop_error
+                if (not self._running and not self._num_waiting
+                        and not self._inflight):
+                    raise KeyError(rid)
+                if deadline is None:
+                    self._cond.wait(timeout=0.1)
+                else:
+                    remaining = deadline - time.perf_counter()
+                    if remaining <= 0:
+                        raise TimeoutError(
+                            f"result {rid} not ready after {timeout}s")
+                    self._cond.wait(timeout=min(remaining, 0.1))
+
+    def take_result(self, rid: int) -> np.ndarray:
+        """Pop and return one result (KeyError if absent or already taken).
+
+        Non-blocking; see ``result`` for the waiting variant.  Long-running
+        servers should reclaim results as they are consumed: ``results``
+        and ``records`` otherwise grow with total traffic, and the
+        admission bound only caps the *waiting* queue, not delivered
+        output retention.
+        """
+        with self._cond:
+            return self.results.pop(rid)
+
+    # ------------------------------------------------------------------
+    # Closed-loop driver + accounting.
+    # ------------------------------------------------------------------
+
+    def run(self, requests) -> ServeReport:
+        """Submit a stream, drain, and build the throughput report.
+
+        Tick-driven mode only (raises while the loop runs).  ``requests``
+        yields ``(model_id, graph)`` pairs; bare graphs are accepted when
+        exactly one model is registered.  With a bounded queue the engine
+        interleaves serving with intake instead of rejecting (closed-loop
+        semantics; use try_submit for open-loop).
+        """
+        if self.running:
+            raise RuntimeError(
+                "engine loop is running; run() is tick-driven mode")
+        t0 = time.perf_counter()
+        max_waiting = self.admission.max_waiting
+        for item in requests:
+            if isinstance(item, Graph):
+                model_id, graph = self.registry.sole_id, item
+            else:
+                model_id, graph = item
+            # Drain ahead of the bound so closed-loop intake is never
+            # rejected (and the reject/shed stats stay pure open-loop
+            # signals).
+            while max_waiting is not None and self.num_waiting >= max_waiting:
+                self.step()
+            self.submit(model_id, graph)
+        self.drain()
+        return self.report(time.perf_counter() - t0)
 
     def _hardware_cost(self, entry: ModelEntry,
                        p: _Pending) -> tuple[float, float]:
@@ -517,71 +801,46 @@ class GnnServeEngine:
             centry.extras[hw_key] = cost
         return cost
 
-    def drain(self) -> int:
-        """Serve until the queue is empty; returns total requests served."""
-        total = 0
-        while True:
-            served = self.step()
-            if not served:
-                return total
-            total += served
+    def queue_wait_gauges(self) -> tuple[int, float]:
+        """(max wait ticks, max wait seconds) over waiting + shed requests.
 
-    def run(self, requests) -> ServeReport:
-        """Submit a stream, drain, and build the throughput report.
-
-        ``requests`` yields ``(model_id, graph)`` pairs; bare graphs are
-        accepted when exactly one model is registered.  With a bounded
-        queue the engine interleaves serving with intake instead of
-        rejecting (closed-loop semantics; use try_submit for open-loop).
+        The starvation gauges must see requests still waiting (or already
+        shed), not just the served ones — a policy that never serves a
+        cold group would otherwise report a low max wait.
         """
-        t0 = time.perf_counter()
-        max_waiting = self.admission.max_waiting
-        for item in requests:
-            if isinstance(item, Graph):
-                model_id, graph = self.registry.sole_id, item
-            else:
-                model_id, graph = item
-            # Drain ahead of the bound so closed-loop intake is never
-            # rejected (and the reject/shed stats stay pure open-loop
-            # signals).
-            while max_waiting is not None and self.num_waiting >= max_waiting:
-                self.step()
-            self.submit(model_id, graph)
-        self.drain()
-        return self.report(time.perf_counter() - t0)
-
-    def take_result(self, rid: int) -> np.ndarray:
-        """Pop and return one result (KeyError if absent or already taken).
-
-        Long-running servers should reclaim results as they are consumed:
-        ``results`` and ``records`` otherwise grow with total traffic, and
-        the admission bound only caps the *waiting* queue, not delivered
-        output retention.
-        """
-        return self.results.pop(rid)
+        with self._cond:
+            now = time.perf_counter()
+            waiting_ticks = max(
+                (self._tick - dq[0].submit_tick
+                 for dq in self._groups.values()), default=0)
+            waiting_s = max(
+                (now - dq[0].t_submit for dq in self._groups.values()),
+                default=0.0)
+            return (max(waiting_ticks, self._max_dropped_wait_ticks),
+                    max(waiting_s, self._max_dropped_wait_s))
 
     def report(self, wall_s: float) -> ServeReport:
-        # The starvation gauge must see requests still waiting (or already
-        # shed), not just the served ones — a policy that never serves a
-        # cold group would otherwise report a low max wait.
-        waiting_wait = max(
-            (self._tick - dq[0].submit_tick for dq in self._groups.values()),
-            default=0)
-        return build_report(self.records, wall_s, self.cache.stats,
+        wait_ticks, wait_s = self.queue_wait_gauges()
+        with self._cond:
+            records = list(self.records)
+        return build_report(records, wall_s, self.cache.stats,
                             self.pool.trace_count, self.backend,
                             scheduler=self.scheduler.name,
                             admission_stats=self.admission.stats,
-                            queue_max_wait_ticks=max(
-                                waiting_wait, self._max_dropped_wait_ticks),
+                            queue_max_wait_ticks=wait_ticks,
+                            queue_max_wait_s=wait_s,
                             kernel_configs=self.pool.kernel_configs(),
                             topology=self.pool.topology())
 
     def reset_metrics(self) -> None:
         """Zero serving metrics while keeping compiled executors and cache
         entries — so benchmarks can warm up and then measure steady state."""
-        self.results.clear()
-        self.records.clear()
-        self.shed_rids.clear()
-        self._max_dropped_wait_ticks = 0
-        self.cache.stats = CacheStats()
-        self.admission.stats = AdmissionStats()
+        with self._cond:
+            self.results.clear()
+            self.records.clear()
+            self.shed_rids.clear()
+            self._shed_set.clear()
+            self._max_dropped_wait_ticks = 0
+            self._max_dropped_wait_s = 0.0
+            self.cache.stats = CacheStats()
+            self.admission.stats = AdmissionStats()

@@ -54,6 +54,13 @@ class ModelEntry:
     quantized: bool = False
     prepare_fn: Optional[Callable] = None
     dataset_name: str = "served"
+    # Per-model latency contract: every request for this model carries the
+    # deadline ``t_submit + slo_ms`` into scheduling (DeadlineScheduler
+    # preempts for at-risk heads, deadline-aware shed drops the least
+    # salvageable victim) and into accounting (``RequestRecord.slo_met``,
+    # per-model p99-vs-SLO attainment in the serve report).  None = no
+    # contract: infinite slack, excluded from attainment.
+    slo_ms: Optional[float] = None
     # Sampled-serving counterpart of prepare_fn: maps a
     # ``(SampleResult, HostGraph)`` pair to ``(graph, edge_weights)``, with
     # degree bookkeeping taken from the host graph (subgraph degrees
@@ -94,11 +101,14 @@ class ModelRegistry:
         dataset_name: str = "served",
         f_in: Optional[int] = None,
         sample_prepare_fn: Optional[Callable] = None,
+        slo_ms: Optional[float] = None,
     ) -> ModelEntry:
         if model_id in self._entries:
             raise ValueError(f"model_id '{model_id}' already registered")
         if task not in ("node", "graph"):
             raise ValueError(f"unknown task '{task}'")
+        if slo_ms is not None and slo_ms <= 0:
+            raise ValueError("slo_ms must be positive (or None = no SLO)")
         if task == "graph" and not (hasattr(model, "node_embed_blocked")
                                     and hasattr(model, "readout")):
             raise ValueError(
@@ -114,7 +124,8 @@ class ModelRegistry:
             model_id=model_id, model=model, params=params, task=task,
             f_in=int(f_in), spec=spec, quantized=quantized,
             prepare_fn=prepare_fn, dataset_name=dataset_name,
-            sample_prepare_fn=sample_prepare_fn)
+            sample_prepare_fn=sample_prepare_fn,
+            slo_ms=float(slo_ms) if slo_ms is not None else None)
         self._entries[model_id] = entry
         return entry
 

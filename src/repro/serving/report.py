@@ -4,14 +4,18 @@ The engine records one ``RequestRecord`` per served request; ``ServeReport``
 folds them into the numbers a deployment dashboard (or the serving
 benchmark's JSON) wants: functional req/s on this host, latency percentiles,
 per-model served counts, queue-wait / anti-starvation behavior (max wait in
-engine ticks), admission-control outcomes (admitted / rejected / shed),
-preprocessing-cache effectiveness, how many jit traces the (model, bucket)
-executor pool actually paid, and the accumulated GHOST latency/energy from
-the analytic model (photonic/perf.py) — i.e. what the same request stream
-would cost on the accelerator.
+wall seconds, plus legacy serve-iteration ticks), per-model p99-vs-SLO
+attainment for every model carrying an ``slo_ms`` contract,
+admission-control outcomes (admitted / rejected / shed), preprocessing-cache
+effectiveness, how many jit traces the (model, bucket) executor pool
+actually paid, and the accumulated GHOST latency/energy from the analytic
+model (photonic/perf.py) — i.e. what the same request stream would cost on
+the accelerator.
 
 Durations are measured with ``time.perf_counter()`` (monotonic): wall-clock
 time is not, and latency stats must never go negative under a clock step.
+SLO deadlines are absolute ``perf_counter`` instants (``t_submit +
+slo_ms``), so ``slo_met`` is exactly ``latency_s * 1e3 <= slo_ms``.
 """
 
 from __future__ import annotations
@@ -33,9 +37,14 @@ class RequestRecord:
     cache_hit: bool
     latency_s: float           # monotonic time: submit -> result materialized
     batch_size: int            # real requests in the batch that served it
-    wait_ticks: int = 0        # engine ticks spent waiting in the queue
+    wait_ticks: int = 0        # serve iterations spent waiting in the queue
+    wait_s: float = 0.0        # wall seconds spent waiting in the queue
     hw_latency_s: float = 0.0  # analytic GHOST inference latency
     hw_energy_j: float = 0.0
+    # SLO contract (models registered with slo_ms=): 0.0 = no contract.
+    slo_ms: float = 0.0
+    deadline_s: float = float("inf")  # absolute perf_counter deadline
+    slo_met: Optional[bool] = None    # None when the model has no SLO
     # Node-query (neighborhood-sampled) intake path only:
     node_query: bool = False
     num_seeds: int = 0         # query nodes answered by this request
@@ -47,6 +56,47 @@ class RequestRecord:
 
 def _percentile(values, q: float) -> float:
     return float(np.percentile(np.asarray(values, np.float64), q)) if values else 0.0
+
+
+def slo_attainment_from(records: list["RequestRecord"]) -> dict:
+    """Per-model (and overall) SLO attainment over served records.
+
+    Only records whose model carries a contract (``slo_ms > 0``) count;
+    a catalog without SLOs yields ``{}``.  Per model: the contract, how
+    many requests it covered, how many met it, the attainment fraction,
+    and the served p99 latency next to the SLO it is measured against —
+    the "p99 vs SLO" pairing a latency dashboard plots.  Shed/rejected
+    requests never produce records, so attainment here is over *answered*
+    requests; the admission counters in the same report complete the
+    offered-traffic picture.
+    """
+    slo_records = [r for r in records if r.slo_ms > 0]
+    if not slo_records:
+        return {}
+    per_model: dict[str, dict] = {}
+    by_model: dict[str, list[RequestRecord]] = {}
+    for r in slo_records:
+        by_model.setdefault(r.model_id, []).append(r)
+    for model_id, recs in by_model.items():
+        met = sum(1 for r in recs if r.slo_met)
+        lats = [r.latency_s for r in recs]
+        per_model[model_id] = {
+            "slo_ms": recs[0].slo_ms,
+            "served": len(recs),
+            "met": met,
+            "attainment": met / len(recs),
+            "p99_latency_ms": _percentile(lats, 99) * 1e3,
+            "p99_over_slo": (_percentile(lats, 99) * 1e3 / recs[0].slo_ms
+                             if recs[0].slo_ms else 0.0),
+        }
+    total_met = sum(m["met"] for m in per_model.values())
+    total = sum(m["served"] for m in per_model.values())
+    return {
+        "served": total,
+        "met": total_met,
+        "attainment": total_met / total,
+        "per_model": per_model,
+    }
 
 
 @dataclasses.dataclass
@@ -65,8 +115,9 @@ class ServeReport:
     per_model: dict          # model_id -> requests served for it
     backend: str
     scheduler: str
-    max_wait_ticks: int      # worst queue wait observed — served, still
-                             # waiting, or shed (starvation gauge)
+    max_wait_ticks: int      # worst queue wait observed in serve iterations
+                             # (legacy gauge — iteration rate varies with
+                             # load under the always-on loop)
     admitted: int
     rejected: int
     shed: int
@@ -75,6 +126,12 @@ class ServeReport:
     hw_energy_j: float
     hw_req_per_s: float
     hw_avg_power_w: float
+    max_wait_s: float = 0.0  # worst queue wait in wall seconds — served,
+                             # still waiting, or shed (the primary
+                             # starvation gauge under the async loop)
+    slo_attainment: dict = dataclasses.field(default_factory=dict)
+                             # per-model p99-vs-SLO attainment (see
+                             # slo_attainment_from); {} = no SLO'd models
     kernel_configs: dict = dataclasses.field(default_factory=dict)
                              # shape-class key -> live kernel config
                              # ({} = hardcoded defaults, no tuner/override)
@@ -102,10 +159,20 @@ class ServeReport:
             f"  latency p50={self.p50_latency_ms:.1f}ms "
             f"p99={self.p99_latency_ms:.1f}ms, "
             f"mean batch {self.mean_batch_size:.1f}, "
-            f"max queue wait {self.max_wait_ticks} ticks\n"
+            f"max queue wait {self.max_wait_s * 1e3:.1f}ms "
+            f"({self.max_wait_ticks} ticks)\n"
             f"  admission: {self.admitted} admitted / {self.rejected} rejected"
             f" / {self.shed} shed (reject rate {self.reject_rate:.2f})\n"
-            f"  per model: {self.per_model}\n"
+            + (f"  SLO attainment: {self.slo_attainment['met']}/"
+               f"{self.slo_attainment['served']} "
+               f"({self.slo_attainment['attainment']:.3f}) — "
+               + ", ".join(
+                   f"{m}: {v['attainment']:.2f} "
+                   f"(p99 {v['p99_latency_ms']:.1f}ms vs SLO "
+                   f"{v['slo_ms']:.0f}ms)"
+                   for m, v in self.slo_attainment["per_model"].items())
+               + "\n" if self.slo_attainment else "")
+            + f"  per model: {self.per_model}\n"
             f"  preprocess cache: {self.cache_hits} hits / "
             f"{self.cache_misses} misses (hit rate {self.cache_hit_rate:.2f})\n"
             f"  jit traces compiled: {self.traces_compiled} "
@@ -142,6 +209,7 @@ def build_report(
     scheduler: str = "fifo",
     admission_stats=None,
     queue_max_wait_ticks: int = 0,
+    queue_max_wait_s: float = 0.0,
     kernel_configs: Optional[dict] = None,
     topology: Optional[dict] = None,
     replicas: Optional[dict] = None,
@@ -191,6 +259,10 @@ def build_report(
         max_wait_ticks=max(
             max((r.wait_ticks for r in records), default=0),
             queue_max_wait_ticks),
+        max_wait_s=max(
+            max((r.wait_s for r in records), default=0.0),
+            queue_max_wait_s),
+        slo_attainment=slo_attainment_from(records),
         admitted=admission_stats.admitted if admission_stats else len(records),
         rejected=admission_stats.rejected if admission_stats else 0,
         shed=admission_stats.shed if admission_stats else 0,

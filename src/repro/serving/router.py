@@ -19,13 +19,20 @@ between them.  ``EngineRouter`` owns that seam:
       replica sheds there without disturbing the others.
   identity (global rids)
       replica-local rids never leak: the router hands out global rids and
-      keeps the (replica, local rid) mapping for ``take_result``.
+      keeps the (replica, local rid) mapping for ``take_result`` /
+      ``result``.  The mapping is lock-protected, so routing is safe from
+      many client threads (each replica's intake is already thread-safe).
+  lifecycle (always-on passthrough)
+      ``start()``/``stop()`` start and stop every replica's serve loop;
+      ``result(rid)`` blocks on the owning replica.  Tick-driven
+      ``step``/``drain``/``run`` remain for closed-loop use.
   accounting (merged + per-replica)
       ``report`` folds every replica's records into one ``ServeReport``
-      (same math a single engine would produce for the union stream) and
-      fills ``ServeReport.replicas`` with per-replica served counts,
-      admission outcomes, and mesh topology — the dashboard view of where
-      traffic actually went.
+      (same math a single engine would produce for the union stream —
+      including SLO attainment, merged across replicas from the union
+      record set) and fills ``ServeReport.replicas`` with per-replica
+      served counts, admission outcomes, per-replica attainment, and mesh
+      topology — the dashboard view of where traffic actually went.
 
 The replicas are plain engines: everything pluggable on an engine
 (scheduler, admission policy, backend, tuner, mesh) is pluggable per
@@ -37,6 +44,7 @@ shared.
 
 from __future__ import annotations
 
+import threading
 import time
 from typing import Optional, Sequence
 
@@ -46,7 +54,7 @@ from repro.core.graph import Graph
 from repro.serving.admission import AdmissionStats
 from repro.serving.cache import CacheStats
 from repro.serving.engine import GnnServeEngine, QueueFullError
-from repro.serving.report import ServeReport, build_report
+from repro.serving.report import ServeReport, build_report, slo_attainment_from
 from repro.serving.sampler import HostGraph
 
 
@@ -83,9 +91,11 @@ class EngineRouter:
         # host graph name -> tuple of replica indices holding a copy.
         self._host_placement: dict[str, tuple[int, ...]] = {}
         self._pinned_count = [0] * num_replicas  # cold models per replica
-        # global rid -> (replica index, replica-local rid)
+        # global rid -> (replica index, replica-local rid); guarded by
+        # _rid_lock so concurrent client threads can route safely.
         self._rid_map: dict[int, tuple[int, int]] = {}
         self._next_rid = 0
+        self._rid_lock = threading.Lock()
 
     @property
     def num_replicas(self) -> int:
@@ -187,11 +197,15 @@ class EngineRouter:
         for i in order:
             local = self.replicas[i].try_submit(model_id, graph)
             if local is not None:
-                rid = self._next_rid
-                self._next_rid += 1
-                self._rid_map[rid] = (i, local)
-                return rid
+                return self._alloc_rid(i, local)
         return None
+
+    def _alloc_rid(self, replica: int, local: int) -> int:
+        with self._rid_lock:
+            rid = self._next_rid
+            self._next_rid += 1
+            self._rid_map[rid] = (replica, local)
+            return rid
 
     def submit(self, model_id: str, graph: Graph) -> int:
         rid = self.try_submit(model_id, graph)
@@ -225,10 +239,7 @@ class EngineRouter:
             local = self.replicas[i].try_submit_nodes(
                 model_id, seed_ids, host=host, **kwargs)
             if local is not None:
-                rid = self._next_rid
-                self._next_rid += 1
-                self._rid_map[rid] = (i, local)
-                return rid
+                return self._alloc_rid(i, local)
         return None
 
     def submit_nodes(self, model_id: str, seed_ids, **kwargs) -> int:
@@ -242,6 +253,34 @@ class EngineRouter:
     # ------------------------------------------------------------------
     # Serving.
     # ------------------------------------------------------------------
+
+    def start(self) -> "EngineRouter":
+        """Start every replica's always-on serve loop."""
+        for e in self.replicas:
+            e.start()
+        return self
+
+    def stop(self, drain: bool = True) -> None:
+        """Stop every replica's serve loop (draining by default)."""
+        errors = []
+        for e in self.replicas:
+            try:
+                e.stop(drain=drain)
+            except RuntimeError as exc:  # keep stopping the rest
+                errors.append(exc)
+        if errors:
+            raise errors[0]
+
+    def result(self, rid: int, timeout: Optional[float] = None) -> np.ndarray:
+        """Blocking pickup by global rid (see ``GnnServeEngine.result``)."""
+        with self._rid_lock:
+            replica, local = self._rid_map.pop(rid)
+        try:
+            return self.replicas[replica].result(local, timeout=timeout)
+        except TimeoutError:
+            with self._rid_lock:  # not delivered: keep the mapping alive
+                self._rid_map[rid] = (replica, local)
+            raise
 
     def step(self) -> int:
         """One tick on every replica with waiting work; returns total served."""
@@ -284,7 +323,8 @@ class EngineRouter:
 
     def take_result(self, rid: int) -> np.ndarray:
         """Pop one result by global rid (KeyError if absent/already taken)."""
-        replica, local = self._rid_map.pop(rid)
+        with self._rid_lock:
+            replica, local = self._rid_map.pop(rid)
         return self.replicas[replica].take_result(local)
 
     # ------------------------------------------------------------------
@@ -292,42 +332,48 @@ class EngineRouter:
     # ------------------------------------------------------------------
 
     def report(self, wall_s: float) -> ServeReport:
-        records = [r for e in self.replicas for r in e.records]
+        records = []
         cache = CacheStats()
         admission = AdmissionStats()
         per_replica: dict[str, dict] = {}
+        wait_ticks, wait_s = 0, 0.0
         for i, e in enumerate(self.replicas):
+            replica_records = list(e.records)
+            records.extend(replica_records)
             cache.hits += e.cache.stats.hits
             cache.misses += e.cache.stats.misses
             cache.evictions += e.cache.stats.evictions
             admission.admitted += e.admission.stats.admitted
             admission.rejected += e.admission.stats.rejected
             admission.shed += e.admission.stats.shed
+            t, s = e.queue_wait_gauges()
+            wait_ticks, wait_s = max(wait_ticks, t), max(wait_s, s)
             served: dict[str, int] = {}
-            for r in e.records:
+            for r in replica_records:
                 served[r.model_id] = served.get(r.model_id, 0) + 1
             per_replica[f"replica{i}"] = {
-                "served": len(e.records),
+                "served": len(replica_records),
                 "per_model": served,
                 "admitted": e.admission.stats.admitted,
                 "rejected": e.admission.stats.rejected,
                 "shed": e.admission.stats.shed,
+                "slo_attainment": slo_attainment_from(replica_records),
                 "traces_compiled": e.pool.trace_count,
                 "topology": e.pool.topology(),
                 "kernel_configs": e.pool.kernel_configs(),
             }
         first = self.replicas[0]
-        waiting_wait = max((max(
-            (e._tick - dq[0].submit_tick for dq in e._groups.values()),
-            default=0) for e in self.replicas), default=0)
-        dropped_wait = max(e._max_dropped_wait_ticks for e in self.replicas)
+        # The merged ServeReport computes union-stream SLO attainment from
+        # the concatenated records itself (build_report -> slo_attainment_
+        # from), so cross-replica attainment needs no extra merge step.
         return build_report(
             records, wall_s, cache,
             sum(e.pool.trace_count for e in self.replicas),
             first.backend,
             scheduler=first.scheduler.name,
             admission_stats=admission,
-            queue_max_wait_ticks=max(waiting_wait, dropped_wait),
+            queue_max_wait_ticks=wait_ticks,
+            queue_max_wait_s=wait_s,
             kernel_configs=self._merged_kernel_configs(),
             topology=self._merged_topology(),
             replicas=per_replica,

@@ -2,8 +2,8 @@
 
 The engine keeps its waiting requests grouped by ``(model_id, bucket)`` —
 only members of one group can ride the same vmapped executor call.  Each
-tick the engine summarizes every non-empty group as a ``GroupState`` and
-asks the active ``Scheduler`` which group to serve next:
+serve iteration the engine summarizes every non-empty group as a
+``GroupState`` and asks the active ``Scheduler`` which group to serve next:
 
   * ``FifoScheduler`` — head-of-line: serve the group holding the globally
     oldest request.  Fair, but under a heterogeneous catalog the oldest
@@ -12,21 +12,38 @@ asks the active ``Scheduler`` which group to serve next:
   * ``OccupancyScheduler`` — serve the fullest group (capped at ``slots``:
     a group deeper than one batch is no fuller, effectively), which
     maximizes per-call occupancy.  Raw greedy occupancy starves cold
-    groups under sustained load, so an age bound overrides it: once any
-    group's head request has waited ``starvation_ticks`` engine ticks (or
-    ``starvation_age_s`` wall seconds, if set), the oldest starved group is
-    served first.  The bound makes the maximum request age finite — a cold
-    request waits at most ``starvation_ticks + (#groups - 1)`` ticks.
+    groups under sustained load, so an anti-starvation bound overrides
+    it.  The **primary bound is wall-clock** (``starvation_age_s``): under
+    the always-on serve loop the iteration rate varies with load (an idle
+    engine parks on a condition variable; a loaded one serves
+    back-to-back), so "N ticks" is not a latency promise — 32 ticks is
+    milliseconds under light load and unbounded seconds under bursty
+    arrival gaps.  ``starvation_ticks`` is kept as a **legacy knob**
+    (``None`` by default) for tick-driven harnesses that step the engine
+    manually and want a deterministic, clock-free bound; when set, either
+    bound trips the override.
+  * ``DeadlineScheduler`` — SLO-aware batch formation for catalogs whose
+    models carry ``slo_ms`` deadlines.  Occupancy-greedy while every
+    group has slack, but the moment any group's head deadline is *at
+    risk* (wall-clock slack at or below ``urgent_slack_s``) it preempts:
+    the urgent group with the earliest deadline is served first (EDF;
+    least slack and earliest deadline coincide at the head because slack
+    is deadline minus now).  Requests with no SLO have infinite slack, so
+    a pure-EDF policy would starve them; the wall-clock ``max_age_s``
+    bound marks any group urgent once its head has waited that long —
+    the anti-starvation role the tick bound used to play, now expressed
+    in the only unit the serve loop actually guarantees.
 
 Policies are deliberately host-side and stateless: they look only at the
-queue summary, never at the arrays, so adding one (deadline-aware,
-weighted-fair, ...) means implementing one method.
+queue summary, never at the arrays, so adding one (weighted-fair,
+cost-model-driven, ...) means implementing one method.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Hashable, Protocol, Sequence, runtime_checkable
+import math
+from typing import Hashable, Optional, Protocol, Sequence, runtime_checkable
 
 GroupKey = Hashable  # in the engine: (model_id, Bucket)
 
@@ -38,8 +55,13 @@ class GroupState:
     key: GroupKey
     size: int             # requests waiting in this group
     head_seq: int         # global submission sequence of its oldest request
-    head_wait_ticks: int  # engine ticks the oldest request has waited
+    head_wait_ticks: int  # serve iterations the oldest request has waited
     head_age_s: float     # wall seconds the oldest request has waited
+    # SLO contract of the oldest request (the head has the earliest
+    # deadline in its group: one group is one model, so one SLO, and
+    # arrival order is submission order).  inf = no deadline.
+    head_deadline_s: float = math.inf   # absolute perf_counter deadline
+    head_slack_s: float = math.inf      # deadline minus now (< 0 = blown)
 
 
 @runtime_checkable
@@ -63,24 +85,33 @@ class FifoScheduler:
 
 
 class OccupancyScheduler:
-    """Fullest-group-first with an age-based anti-starvation bound."""
+    """Fullest-group-first with a wall-clock anti-starvation bound.
+
+    ``starvation_age_s`` (primary, default 0.5 s) marks a group starved
+    once its head request has waited that many wall seconds;
+    ``starvation_ticks`` (legacy, default off) additionally marks a group
+    starved after that many serve iterations — only meaningful to
+    harnesses that drive ``step()`` at a known cadence.  Starved groups
+    preempt occupancy greed, oldest head first.
+    """
 
     name = "occupancy"
 
-    def __init__(self, starvation_ticks: int = 32,
-                 starvation_age_s: float | None = None):
-        if starvation_ticks < 1:
-            raise ValueError("starvation_ticks must be >= 1")
+    def __init__(self, starvation_age_s: Optional[float] = 0.5,
+                 starvation_ticks: Optional[int] = None):
         if starvation_age_s is not None and starvation_age_s <= 0:
             raise ValueError("starvation_age_s must be positive")
-        self.starvation_ticks = starvation_ticks
+        if starvation_ticks is not None and starvation_ticks < 1:
+            raise ValueError("starvation_ticks must be >= 1")
         self.starvation_age_s = starvation_age_s
+        self.starvation_ticks = starvation_ticks
 
     def _starved(self, g: GroupState) -> bool:
-        if g.head_wait_ticks >= self.starvation_ticks:
+        if (self.starvation_age_s is not None
+                and g.head_age_s >= self.starvation_age_s):
             return True
-        return (self.starvation_age_s is not None
-                and g.head_age_s >= self.starvation_age_s)
+        return (self.starvation_ticks is not None
+                and g.head_wait_ticks >= self.starvation_ticks)
 
     def select(self, groups: Sequence[GroupState], slots: int) -> GroupKey:
         starved = [g for g in groups if self._starved(g)]
@@ -92,7 +123,53 @@ class OccupancyScheduler:
                    key=lambda g: (min(g.size, slots), -g.head_seq)).key
 
 
-SCHEDULERS = ("fifo", "occupancy")
+class DeadlineScheduler:
+    """EDF / least-slack batch formation with an occupancy fallback.
+
+    Two regimes:
+
+      relaxed — no group is at risk: serve the fullest group (occupancy
+        greed, throughput mode); among equally full groups prefer the
+        earliest head deadline, then the oldest head.
+      urgent — some group's head slack is at or below ``urgent_slack_s``
+        (its deadline is closer than the margin reserved for service
+        time), or its head has waited ``max_age_s`` wall seconds (the
+        anti-starvation bound for no-SLO traffic, whose slack is
+        infinite): serve the urgent group with the earliest deadline
+        (ties: oldest head) even if it forms a nearly empty batch.
+
+    ``urgent_slack_s`` should cover roughly one batch service time plus
+    result materialization — the point past which waiting one more
+    iteration turns a meetable deadline into a miss.
+    """
+
+    name = "deadline"
+
+    def __init__(self, urgent_slack_s: float = 0.01,
+                 max_age_s: Optional[float] = 0.5):
+        if urgent_slack_s < 0:
+            raise ValueError("urgent_slack_s must be >= 0")
+        if max_age_s is not None and max_age_s <= 0:
+            raise ValueError("max_age_s must be positive")
+        self.urgent_slack_s = urgent_slack_s
+        self.max_age_s = max_age_s
+
+    def _urgent(self, g: GroupState) -> bool:
+        if g.head_slack_s <= self.urgent_slack_s:
+            return True
+        return self.max_age_s is not None and g.head_age_s >= self.max_age_s
+
+    def select(self, groups: Sequence[GroupState], slots: int) -> GroupKey:
+        urgent = [g for g in groups if self._urgent(g)]
+        if urgent:
+            return min(urgent,
+                       key=lambda g: (g.head_deadline_s, g.head_seq)).key
+        return max(groups, key=lambda g: (min(g.size, slots),
+                                          -g.head_deadline_s,
+                                          -g.head_seq)).key
+
+
+SCHEDULERS = ("fifo", "occupancy", "deadline")
 
 
 def make_scheduler(policy, **kwargs) -> Scheduler:
@@ -102,6 +179,8 @@ def make_scheduler(policy, **kwargs) -> Scheduler:
             return FifoScheduler(**kwargs)
         if policy == "occupancy":
             return OccupancyScheduler(**kwargs)
+        if policy == "deadline":
+            return DeadlineScheduler(**kwargs)
         raise ValueError(
             f"unknown scheduler '{policy}'; expected one of {SCHEDULERS}")
     if isinstance(policy, Scheduler):

@@ -1,0 +1,396 @@
+"""Always-on serve loop + SLO-aware deadline scheduling.
+
+The load-bearing claims of the async serving refactor:
+  * the always-on loop delivers every concurrently-submitted request
+    exactly once — no lost rids, no duplicates — while N client threads
+    submit against it;
+  * async serving is BIT-EXACT vs the tick-driven loop for an identical
+    request set, on all three backends (per-request outputs are
+    batch-composition-independent, so how batches happen to form cannot
+    change any answer);
+  * ``DeadlineScheduler`` is occupancy-greedy with slack, preempts to EDF
+    when a head deadline is at risk, and its ``max_age_s`` bound keeps
+    no-SLO traffic (infinite slack) from starving;
+  * admission decisions are atomic with queue mutation (the waiting bound
+    cannot overshoot under concurrent submitters) and the shed victim is
+    the waiting request with the least salvageable slack;
+  * ``slo_ms`` threads end to end: registry validation, per-request
+    ``slo_met``, per-model p99-vs-SLO attainment in the report;
+  * lifecycle contracts: ``step``/``run`` refuse while the loop runs, a
+    crashed loop surfaces its error instead of hanging clients, shed rids
+    raise KeyError from blocking pickup.
+"""
+
+import math
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.graph import Graph
+from repro.gnn import build_model
+from repro.photonic.perf import GhostConfig
+from repro.serving import (
+    DeadlineScheduler,
+    GnnServeEngine,
+    GroupState,
+    RequestRecord,
+    SCHEDULERS,
+    make_scheduler,
+    slo_attainment_from,
+)
+
+CFG = GhostConfig(v=8, n=8)
+
+
+def make_graph(seed, nv, ne, f=5):
+    rng = np.random.default_rng(seed)
+    return Graph(
+        edge_src=rng.integers(0, nv, ne).astype(np.int32),
+        edge_dst=rng.integers(0, nv, ne).astype(np.int32),
+        node_feat=rng.standard_normal((nv, f)).astype(np.float32),
+    ).validate()
+
+
+def build(f=5, seed=0):
+    model = build_model("gcn", f, 2, hidden=4)
+    return model, model.init(jax.random.PRNGKey(seed))
+
+
+# ---------------------------------------------------------------------------
+# DeadlineScheduler policy (pure unit tests: no engine, no clocks).
+# ---------------------------------------------------------------------------
+
+
+def g_state(key, size, head_seq, age_s=0.0,
+            deadline=math.inf, slack=math.inf):
+    return GroupState(key=key, size=size, head_seq=head_seq,
+                      head_wait_ticks=0, head_age_s=age_s,
+                      head_deadline_s=deadline, head_slack_s=slack)
+
+
+def test_deadline_relaxed_is_occupancy_greedy():
+    sched = DeadlineScheduler(urgent_slack_s=0.01)
+    groups = [g_state("small", size=2, head_seq=0, deadline=5.0, slack=4.0),
+              g_state("full", size=8, head_seq=3, deadline=9.0, slack=8.0)]
+    assert sched.select(groups, slots=8) == "full"
+
+
+def test_deadline_relaxed_ties_break_by_earliest_deadline():
+    sched = DeadlineScheduler(urgent_slack_s=0.01)
+    # Both fill the batch; the earlier head deadline wins.
+    groups = [g_state("late", size=9, head_seq=0, deadline=9.0, slack=8.0),
+              g_state("soon", size=4, head_seq=5, deadline=5.0, slack=4.0)]
+    assert sched.select(groups, slots=4) == "soon"
+
+
+def test_deadline_urgent_preempts_occupancy():
+    sched = DeadlineScheduler(urgent_slack_s=0.01)
+    # A lone at-risk request beats a full relaxed group.
+    groups = [g_state("full", size=8, head_seq=0, deadline=9.0, slack=8.0),
+              g_state("risk", size=1, head_seq=7, deadline=1.0, slack=0.005)]
+    assert sched.select(groups, slots=8) == "risk"
+
+
+def test_deadline_urgent_is_edf_among_urgent():
+    sched = DeadlineScheduler(urgent_slack_s=0.01)
+    groups = [
+        g_state("blown", size=1, head_seq=9, deadline=2.0, slack=-0.5),
+        g_state("closer", size=1, head_seq=5, deadline=1.0, slack=0.002),
+        g_state("calm", size=8, head_seq=0, deadline=9.0, slack=8.0),
+    ]
+    # Both urgent; 'closer' has the earlier absolute deadline.
+    assert sched.select(groups, slots=8) == "closer"
+
+
+def test_deadline_max_age_rescues_no_slo_traffic():
+    sched = DeadlineScheduler(urgent_slack_s=0.01, max_age_s=0.5)
+    # Infinite slack (no SLO) but past the age bound -> urgent.
+    groups = [g_state("hot", size=8, head_seq=5, deadline=4.0, slack=3.0),
+              g_state("noslo", size=1, head_seq=0, age_s=0.6)]
+    assert sched.select(groups, slots=8) == "noslo"
+    # Under the age bound it stays occupancy-greedy.
+    calm = [g_state("hot", size=8, head_seq=5, deadline=4.0, slack=3.0),
+            g_state("noslo", size=1, head_seq=0, age_s=0.1)]
+    assert sched.select(calm, slots=8) == "hot"
+
+
+def test_deadline_factory_and_validation():
+    assert "deadline" in SCHEDULERS
+    sched = make_scheduler("deadline", urgent_slack_s=0.02)
+    assert sched.name == "deadline" and sched.urgent_slack_s == 0.02
+    with pytest.raises(ValueError):
+        DeadlineScheduler(urgent_slack_s=-1.0)
+    with pytest.raises(ValueError):
+        DeadlineScheduler(max_age_s=0.0)
+
+
+# ---------------------------------------------------------------------------
+# Attainment math (pure accounting).
+# ---------------------------------------------------------------------------
+
+
+def _rec(model_id, lat_ms, slo_ms, rid=0):
+    return RequestRecord(
+        rid=rid, model_id=model_id, num_nodes=4, num_edges=4, bucket="b",
+        cache_hit=False, latency_s=lat_ms / 1e3, batch_size=1,
+        slo_ms=slo_ms,
+        slo_met=(lat_ms <= slo_ms) if slo_ms else None)
+
+
+def test_slo_attainment_math():
+    records = (
+        [_rec("tight", 5.0, 10.0)] * 3 + [_rec("tight", 50.0, 10.0)]
+        + [_rec("loose", 40.0, 100.0)] * 2
+        + [_rec("free", 7.0, 0.0)] * 5      # no SLO: excluded entirely
+    )
+    att = slo_attainment_from(records)
+    assert att["served"] == 6 and att["met"] == 5
+    assert att["attainment"] == pytest.approx(5 / 6)
+    tight = att["per_model"]["tight"]
+    assert tight["served"] == 4 and tight["met"] == 3
+    assert tight["attainment"] == pytest.approx(0.75)
+    assert tight["slo_ms"] == 10.0
+    assert tight["p99_latency_ms"] > 10.0      # the miss dominates p99
+    assert tight["p99_over_slo"] > 1.0
+    loose = att["per_model"]["loose"]
+    assert loose["attainment"] == 1.0 and loose["p99_over_slo"] < 1.0
+    assert "free" not in att["per_model"]
+    assert slo_attainment_from([_rec("free", 7.0, 0.0)]) == {}
+
+
+def test_registry_slo_validation_and_engine_threading():
+    g = make_graph(0, nv=12, ne=20)
+    model, params = build()
+    eng = GnnServeEngine(cfg=CFG, slots=2, scheduler="deadline")
+    entry = eng.register("slo", model, params, slo_ms=10_000.0)
+    assert entry.slo_ms == 10_000.0
+    eng.register("free", model, params)
+    with pytest.raises(ValueError):
+        eng.register("bad", model, params, slo_ms=0.0)
+
+    r_slo = eng.submit("slo", g)
+    r_free = eng.submit("free", g)
+    eng.drain()
+    rec_slo = next(r for r in eng.records if r.rid == r_slo)
+    rec_free = next(r for r in eng.records if r.rid == r_free)
+    assert rec_slo.slo_ms == 10_000.0 and rec_slo.slo_met is True
+    assert math.isfinite(rec_slo.deadline_s)
+    assert rec_free.slo_ms == 0.0 and rec_free.slo_met is None
+    assert rec_free.deadline_s == math.inf
+    rep = eng.report(1.0)
+    assert rep.slo_attainment["per_model"]["slo"]["attainment"] == 1.0
+    assert "free" not in rep.slo_attainment["per_model"]
+    assert "SLO attainment" in rep.pretty()
+
+
+# ---------------------------------------------------------------------------
+# Async vs tick bit-exactness.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas", "pallas_fused"])
+def test_async_loop_bit_exact_vs_tick_loop(backend):
+    """Identical request set, identical per-request outputs — regardless of
+    how the always-on loop happened to slice batches."""
+    graphs = [make_graph(s, nv=12 + 4 * (s % 3), ne=30) for s in range(6)]
+    model, params = build()
+
+    def fresh():
+        eng = GnnServeEngine(cfg=CFG, slots=4, backend=backend,
+                             scheduler="deadline")
+        eng.register("a", model, params, slo_ms=50.0)
+        eng.register("b", model, params)
+        return eng
+
+    tick = fresh()
+    for i, g in enumerate(graphs):
+        tick.submit("a" if i % 2 else "b", g)
+    tick.drain()
+
+    async_eng = fresh().start()
+    rids = [async_eng.submit("a" if i % 2 else "b", g)
+            for i, g in enumerate(graphs)]
+    async_eng.stop(drain=True)
+
+    assert rids == list(range(len(graphs)))  # same rid space as tick mode
+    for rid in rids:
+        np.testing.assert_array_equal(async_eng.results[rid],
+                                      tick.results[rid])
+
+
+# ---------------------------------------------------------------------------
+# Concurrent submitters against the running loop.
+# ---------------------------------------------------------------------------
+
+
+def test_concurrent_submitters_exactly_once_delivery():
+    n_threads, per_thread = 6, 8
+    graphs = [make_graph(s, nv=10 + 4 * s, ne=25) for s in range(3)]
+    model, params = build()
+    eng = GnnServeEngine(cfg=CFG, slots=4, scheduler="deadline")
+    eng.register("m", model, params, slo_ms=60_000.0)
+    eng.start()
+
+    rid_lists = [[] for _ in range(n_threads)]
+    errors = []
+
+    def client(t):
+        try:
+            for j in range(per_thread):
+                rid_lists[t].append(
+                    eng.submit("m", graphs[(t + j) % len(graphs)]))
+        except BaseException as e:  # surfaced below, not swallowed
+            errors.append(e)
+
+    threads = [threading.Thread(target=client, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    eng.stop(drain=True)
+
+    assert not errors
+    all_rids = [rid for rids in rid_lists for rid in rids]
+    total = n_threads * per_thread
+    # No lost or duplicated rids...
+    assert len(all_rids) == total
+    assert len(set(all_rids)) == total
+    # ...every one delivered exactly once...
+    for rid in all_rids:
+        out = eng.take_result(rid)
+        assert out.shape[1] == 2
+        with pytest.raises(KeyError):
+            eng.take_result(rid)
+    # ...and accounting agrees.
+    assert sorted(r.rid for r in eng.records) == sorted(all_rids)
+    assert eng.admission.stats.admitted == total
+    rep = eng.report(1.0)
+    assert rep.requests == total
+    assert rep.slo_attainment["served"] == total
+
+
+def test_blocking_result_pickup_and_lifecycle_contracts():
+    g = make_graph(1, nv=12, ne=20)
+    model, params = build()
+    eng = GnnServeEngine(cfg=CFG, slots=2)
+    eng.register("m", model, params)
+    eng.start()
+    with pytest.raises(RuntimeError):
+        eng.start()                      # already running
+    with pytest.raises(RuntimeError):
+        eng.step()                       # the loop owns batch formation
+    with pytest.raises(RuntimeError):
+        eng.run([g])
+    rid = eng.submit("m", g)
+    out = eng.result(rid, timeout=60.0)  # blocking pickup pops
+    assert out.shape[0] == g.num_nodes
+    with pytest.raises(KeyError):
+        eng.take_result(rid)             # already taken
+    eng.stop()
+    eng.stop()                           # idempotent
+    with pytest.raises(KeyError):
+        eng.result(rid, timeout=0.1)     # loop idle + unknown -> immediate
+    # Restartable: the queue and executors survive a stop/start cycle.
+    eng.start()
+    rid2 = eng.submit("m", g)
+    np.testing.assert_array_equal(eng.result(rid2, timeout=60.0), out)
+    eng.stop()
+
+
+def test_serve_loop_crash_surfaces_to_clients():
+    g = make_graph(2, nv=12, ne=20)
+    model, params = build()
+    eng = GnnServeEngine(cfg=CFG, slots=2)
+    eng.register("m", model, params)
+
+    def boom(*a, **kw):
+        raise RuntimeError("executor exploded")
+
+    eng.pool.executor = boom
+    eng.start()
+    rid = eng.submit("m", g)
+    with pytest.raises(RuntimeError, match="serve loop failed"):
+        eng.result(rid, timeout=30.0)
+    with pytest.raises(RuntimeError, match="serve loop failed"):
+        eng.stop()
+
+
+# ---------------------------------------------------------------------------
+# Admission under concurrency + deadline-aware shed.
+# ---------------------------------------------------------------------------
+
+
+def test_admission_bound_never_overshoots_under_concurrency():
+    """Many threads race a bounded queue with no consumer: exactly
+    max_waiting admissions may land, no matter the interleaving."""
+    bound, n_threads, per_thread = 4, 8, 6
+    g = make_graph(3, nv=12, ne=20)
+    model, params = build()
+    eng = GnnServeEngine(cfg=CFG, slots=2, max_waiting=bound)
+    eng.register("m", model, params)
+
+    outcomes = []
+    lock = threading.Lock()
+
+    def client():
+        for _ in range(per_thread):
+            rid = eng.try_submit("m", g)
+            with lock:
+                outcomes.append(rid)
+
+    threads = [threading.Thread(target=client) for _ in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+
+    admitted = [r for r in outcomes if r is not None]
+    assert len(admitted) == bound
+    assert eng.num_waiting == bound
+    assert eng.admission.stats.admitted == bound
+    assert eng.admission.stats.rejected == n_threads * per_thread - bound
+    eng.drain()
+    assert sorted(eng.results) == sorted(admitted)
+
+
+def test_shed_victim_has_least_salvageable_slack():
+    g = make_graph(4, nv=12, ne=20)
+    model, params = build()
+    eng = GnnServeEngine(cfg=CFG, slots=2, max_waiting=2,
+                         admission_policy="shed-oldest")
+    eng.register("tight", model, params, slo_ms=5.0)
+    eng.register("loose", model, params, slo_ms=60_000.0)
+    r_loose = eng.submit("loose", g)   # oldest, but its deadline is far
+    r_tight = eng.submit("tight", g)   # nearest deadline = least slack
+    r_new = eng.submit("loose", g)     # queue full -> shed decides
+    assert eng.shed_rids == [r_tight]
+    eng.drain()
+    assert r_loose in eng.results and r_new in eng.results
+    # Blocking pickup tells the truth about the victim.
+    with pytest.raises(KeyError, match="shed"):
+        eng.result(r_tight, timeout=1.0)
+
+
+def test_deadline_scheduler_preempts_in_engine():
+    """End to end: a tight-SLO straggler jumps a full loose-SLO group the
+    moment its slack is gone."""
+    hot = make_graph(5, nv=16, ne=40)
+    cold = make_graph(6, nv=60, ne=150)    # different bucket
+    model, params = build()
+    eng = GnnServeEngine(
+        cfg=CFG, slots=4,
+        scheduler=DeadlineScheduler(urgent_slack_s=10.0, max_age_s=None))
+    eng.register("loose", model, params, slo_ms=60_000.0)
+    eng.register("tight", model, params, slo_ms=1_000.0)  # slack < 10s now
+    for _ in range(4):
+        eng.submit("loose", hot)
+    tight_rid = eng.submit("tight", cold)
+    eng.step()
+    # The tight request was urgent on arrival (1s deadline vs 10s margin),
+    # so it preempted the full loose batch.
+    assert tight_rid in eng.results
+    assert eng.records[0].rid == tight_rid

@@ -212,7 +212,10 @@ def test_occupancy_antistarvation_serves_cold_group():
     bound = 3
     eng = GnnServeEngine(
         cfg=GhostConfig(v=8, n=8), slots=4,
-        scheduler=OccupancyScheduler(starvation_ticks=bound))
+        # age bound off: this tick-driven test wants the tick bound to be
+        # what serves the cold group, deterministically.
+        scheduler=OccupancyScheduler(starvation_ticks=bound,
+                                     starvation_age_s=None))
     eng.register("m", model, params)
 
     cold_rid = eng.submit("m", cold)
@@ -320,7 +323,9 @@ def test_report_max_wait_sees_waiting_and_shed_requests():
     params = model.init(jax.random.PRNGKey(0))
     eng = GnnServeEngine(
         cfg=GhostConfig(v=8, n=8), slots=4,
-        scheduler=OccupancyScheduler(starvation_ticks=100))
+        # neither bound may trip: the point is the *gauge*, not a rescue
+        scheduler=OccupancyScheduler(starvation_ticks=100,
+                                     starvation_age_s=None))
     eng.register("m", model, params)
     cold_rid = eng.submit("m", cold)
     for _ in range(3):
