@@ -529,11 +529,16 @@ def _overload_cell(engine: GnnServeEngine, schedule, window_s: float) -> dict:
         "mean_batch_size": rep.mean_batch_size,
         "shed": rep.shed,
         "rejected": rep.rejected,
+        "unmeetable": rep.unmeetable,
         "attainment": att.get("attainment", 0.0),
+        # Served-but-SLO-missed: the waste service-time admission exists
+        # to eliminate (device time spent on answers that arrive late).
+        "served_slo_missed": att.get("served", 0) - att.get("met", 0),
         "attainment_per_model": {
             m: v["attainment"] for m, v in att.get("per_model", {}).items()},
         "p99_over_slo_per_model": {
             m: v["p99_over_slo"] for m, v in att.get("per_model", {}).items()},
+        "pipeline": rep.pipeline,
     }
 
 
@@ -551,62 +556,102 @@ def _overload_pool(count: int, nv: int, f: int, seed: int) -> list[Graph]:
     return pool
 
 
-def run_overload(rates=(100, 200, 400, 800), window_s: float = 2.0,
-                 slots: int = 8, backend: str = "jnp",
-                 max_waiting: int = 64, hot_slo_ms: float = 250.0,
-                 tight_slo_ms: float = 30.0, tight_frac: float = 0.15,
-                 seed: int = 23) -> dict:
-    # Heavy enough that one batch costs ~10 ms on a CPU host: the default
-    # rate ramp then spans under-load (queue mostly empty, every scheduler
-    # attains) through near-capacity (queueing delay is the differentiator)
-    # into overload (the bounded queue sheds).
+def _overload_catalog(tight_frac: float):
+    """Shared SLO'd two-model catalog for the overload + pipeline benches.
+
+    Heavy enough that one batch costs ~10 ms on a CPU host: the default
+    rate ramp then spans under-load (queue mostly empty, every scheduler
+    attains) through near-capacity (queueing delay is the differentiator)
+    into overload (the bounded queue sheds).
+    """
     f, hidden, nv = 32, 128, 256
     hot = build_model("gcn", f, 3, hidden=hidden)
     tight = build_model("sage", f, 3, hidden=hidden)
     ks = jax.random.split(jax.random.PRNGKey(6), 2)
-    hot_params, tight_params = hot.init(ks[0]), tight.init(ks[1])
+    models = {"hot_loose": (hot, hot.init(ks[0])),
+              "rare_tight": (tight, tight.init(ks[1]))}
     pools = {
         "hot_loose": _overload_pool(4, nv, f, seed=30),
         "rare_tight": _overload_pool(4, nv, f, seed=31),
     }
     mix = {"hot_loose": 1.0 - tight_frac, "rare_tight": tight_frac}
+    return models, pools, mix
+
+
+def _overload_engine(models, pools, *, slots, backend, max_waiting,
+                     hot_slo_ms, tight_slo_ms, scheduler,
+                     pipeline_depth=2,
+                     service_time_admission=False) -> GnnServeEngine:
+    """One warmed engine (every trace compiled, service EWMAs learned)."""
+    engine = GnnServeEngine(
+        cfg=GhostConfig(), slots=slots, backend=backend,
+        scheduler=scheduler, max_waiting=max_waiting,
+        admission_policy="shed-oldest", pipeline_depth=pipeline_depth,
+        service_time_admission=service_time_admission)
+    hot, hot_params = models["hot_loose"]
+    tight, tight_params = models["rare_tight"]
+    engine.register("hot_loose", hot, hot_params, task="node",
+                    slo_ms=hot_slo_ms)
+    engine.register("rare_tight", tight, tight_params, task="node",
+                    slo_ms=tight_slo_ms)
+    # Warm-up compiles every trace AND (from the second execution per
+    # key on) feeds the service-time EWMA, so a service-admission engine
+    # starts its first measured cell with a learned model — exactly the
+    # steady state a long-running server sits in.
+    for mid, pool in pools.items():
+        for g in pool:
+            engine.submit(mid, g)
+            engine.drain()
+    return engine
+
+
+def _deadline_policy():
+    # Urgency margin ~= one batch service time + a little headroom:
+    # preempting any earlier wastes occupancy, any later turns a
+    # meetable tight deadline into a miss.  (With a learned service-time
+    # estimate the scheduler takes max(margin, estimate) per group.)
+    return make_scheduler("deadline", urgent_slack_s=0.015)
+
+
+def run_overload(rates=(100, 200, 400, 800), window_s: float = 2.0,
+                 slots: int = 8, backend: str = "jnp",
+                 max_waiting: int = 64, hot_slo_ms: float = 250.0,
+                 tight_slo_ms: float = 30.0, tight_frac: float = 0.15,
+                 seed: int = 23) -> dict:
+    models, pools, mix = _overload_catalog(tight_frac)
     # One shared arrival schedule per rate: every scheduler sees the exact
     # same offered traffic.
     schedules = {rate: _poisson_schedule(rate, window_s, pools, mix,
                                          seed + int(rate))
                  for rate in rates}
 
+    # The three classic schedulers run with service-time admission OFF
+    # (the PR-9 slack-only-shed baseline); "deadline_slo_admission" is the
+    # same deadline policy with the learned-EWMA admission ON — the A/B
+    # that isolates what enqueue-time infeasibility rejection buys.
+    configs = {
+        "fifo": ("fifo", False),
+        "occupancy": ("occupancy", False),
+        "deadline": (_deadline_policy(), False),
+        "deadline_slo_admission": (_deadline_policy(), True),
+    }
     results: dict[str, dict] = {}
-    for scheduler in ("fifo", "occupancy", "deadline"):
-        if scheduler == "deadline":
-            # Urgency margin ~= one batch service time + a little headroom:
-            # preempting any earlier wastes occupancy, any later turns a
-            # meetable tight deadline into a miss.
-            policy = make_scheduler("deadline", urgent_slack_s=0.015)
-        else:
-            policy = scheduler
-        engine = GnnServeEngine(
-            cfg=GhostConfig(), slots=slots, backend=backend,
-            scheduler=policy, max_waiting=max_waiting,
-            admission_policy="shed-oldest")
-        engine.register("hot_loose", hot, hot_params, task="node",
-                        slo_ms=hot_slo_ms)
-        engine.register("rare_tight", tight, tight_params, task="node",
-                        slo_ms=tight_slo_ms)
-        for mid, pool in pools.items():     # warm-up: compile every trace
-            for g in pool:
-                engine.submit(mid, g)
-                engine.drain()
+    for name, (policy, slo_admission) in configs.items():
+        engine = _overload_engine(
+            models, pools, slots=slots, backend=backend,
+            max_waiting=max_waiting, hot_slo_ms=hot_slo_ms,
+            tight_slo_ms=tight_slo_ms, scheduler=policy,
+            service_time_admission=slo_admission)
         per_rate = {}
         for rate in rates:
             cell = _overload_cell(engine, schedules[rate], window_s)
             per_rate[str(rate)] = cell
-            emit(f"serving/overload_{scheduler}_{rate}",
+            emit(f"serving/overload_{name}_{rate}",
                  0.0 if not cell["req_per_s"] else 1e6 / cell["req_per_s"],
                  f"att={cell['attainment']:.3f};"
                  f"p99={cell['p99_latency_ms']:.1f}ms;"
-                 f"shed={cell['shed']}")
-        results[scheduler] = per_rate
+                 f"shed={cell['shed']};unmeet={cell['unmeetable']}")
+        results[name] = per_rate
 
     beats_at = [
         rate for rate in rates
@@ -620,6 +665,15 @@ def run_overload(rates=(100, 200, 400, 800), window_s: float = 2.0,
                      if results[sched][str(rate)]["shed"] > 0), None)
         for sched in results
     }
+    # Where does admission strictly cut served-but-missed without costing
+    # attainment, vs the slack-only deadline baseline?
+    slo_admission_reduces_missed_at = [
+        rate for rate in rates
+        if (results["deadline_slo_admission"][str(rate)]["served_slo_missed"]
+            < results["deadline"][str(rate)]["served_slo_missed"]
+            and results["deadline_slo_admission"][str(rate)]["attainment"]
+            >= results["deadline"][str(rate)]["attainment"])
+    ]
     return bench_json({
         "bench": "serving_overload",
         "rates_req_s": list(rates),
@@ -633,11 +687,102 @@ def run_overload(rates=(100, 200, 400, 800), window_s: float = 2.0,
         "schedulers": results,
         "deadline_beats_fifo_and_occupancy_at": beats_at,
         "first_shed_rate": first_shed,
+        "slo_admission_reduces_missed_at": slo_admission_reduces_missed_at,
         "note": "open-loop Poisson arrivals against the always-on serve "
                 "loop; identical offered schedule per rate across "
                 "schedulers; attainment is over served requests "
-                "(shed/rejected requests are counted separately)",
+                "(shed/rejected requests are counted separately); "
+                "deadline_slo_admission = deadline scheduling + learned-"
+                "service-time admission (unmeetable SLOs rejected at "
+                "enqueue), the others run the PR-9 slack-only-shed "
+                "baseline",
     })
+
+
+def run_pipeline_ab(depths=(0, 2, 4), rate: float = 1200.0,
+                    window_s: float = 2.0, slots: int = 8,
+                    backend: str = "jnp", max_waiting: int = 64,
+                    hot_slo_ms: float = 250.0, tight_slo_ms: float = 30.0,
+                    tight_frac: float = 0.15, seed: int = 29) -> dict:
+    """Pipelined-vs-serial serve-loop A/B at one fixed offered load.
+
+    Every depth sees the *identical* arrival schedule at a rate chosen to
+    saturate the serial loop, so served req/s is the loop's capacity:
+    depth 0 serializes stack -> execute -> writeback, depth >= 2 overlaps
+    host stacking of batch k+1 with device execution of batch k (plus
+    record building of batch k-1 in a second worker).  Outputs are
+    bit-exact across depths (tested in tests/test_serving_pipeline.py);
+    this measures only the throughput side of the claim.
+
+    The doc stamps ``host_cores``: stage overlap needs a core for the
+    host stages to run ON while the device stage computes.  On a 1-core
+    host the A/B is parity-within-noise at best — throughput there is
+    work-conserving (every thread timeslices the single core; a
+    micro-benchmark on such a host shows one concurrent Python thread
+    doubling a jitted call's wall time), so ``pipelined_beats_serial``
+    is only a meaningful overlap verdict when ``overlap_possible``.
+    """
+    models, pools, mix = _overload_catalog(tight_frac)
+    schedule = _poisson_schedule(rate, window_s, pools, mix, seed)
+    cells: dict[str, dict] = {}
+    for depth in depths:
+        engine = _overload_engine(
+            models, pools, slots=slots, backend=backend,
+            max_waiting=max_waiting, hot_slo_ms=hot_slo_ms,
+            tight_slo_ms=tight_slo_ms, scheduler=_deadline_policy(),
+            pipeline_depth=depth, service_time_admission=False)
+        cell = _overload_cell(engine, schedule, window_s)
+        cells[str(depth)] = cell
+        pl = cell["pipeline"]
+        emit(f"serving/pipeline_depth{depth}",
+             0.0 if not cell["req_per_s"] else 1e6 / cell["req_per_s"],
+             f"served={cell['served']};att={cell['attainment']:.3f};"
+             f"p99={cell['p99_latency_ms']:.1f}ms;"
+             f"exec_busy={pl.get('exec_busy_frac', 0.0):.2f};"
+             f"stack_busy={pl.get('stack_busy_frac', 0.0):.2f}")
+
+    try:
+        host_cores = len(os.sched_getaffinity(0))
+    except AttributeError:            # non-Linux fallback
+        host_cores = os.cpu_count() or 1
+    doc = {
+        "bench": "serving_pipeline",
+        "rate_req_s": rate,
+        "window_s": window_s,
+        "slots": slots,
+        "backend": backend,
+        "max_waiting": max_waiting,
+        "slo_ms": {"hot_loose": hot_slo_ms, "rare_tight": tight_slo_ms},
+        "traffic_mix": mix,
+        "depths": [int(d) for d in depths],
+        "cells": cells,
+        "host_cores": host_cores,
+        # Stage overlap needs a second core for the host stages to run on
+        # while the device computes; on one core throughput is
+        # work-conserving and the A/B measures pipeline overhead only.
+        "overlap_possible": host_cores > 1,
+        "note": "identical offered Poisson schedule per depth at a rate "
+                "that saturates the serial loop; served req/s is loop "
+                "capacity; depth 0 = serial PR-9 loop, depth N = stacker "
+                "+ N executor workers (device stage serialized behind the "
+                "engine device lock); outputs are bit-exact across depths "
+                "by construction; pipelined_beats_serial is only an "
+                "overlap verdict when overlap_possible (host_cores > 1) — "
+                "a 1-core host timeslices every stage onto the same core, "
+                "so parity there is the physical ceiling",
+    }
+    pipelined = {d: cells[str(d)]["req_per_s"] for d in depths if d >= 1}
+    if pipelined:
+        best_depth = max(pipelined, key=pipelined.get)
+        doc["best_pipelined_depth"] = int(best_depth)
+        doc["best_pipelined_req_per_s"] = pipelined[best_depth]
+        if "0" in cells:
+            serial = cells["0"]["req_per_s"]
+            doc["serial_req_per_s"] = serial
+            doc["pipelined_speedup"] = (pipelined[best_depth] / serial
+                                        if serial > 0 else 0.0)
+            doc["pipelined_beats_serial"] = pipelined[best_depth] > serial
+    return bench_json(doc)
 
 
 def run(quick: bool = True, requests: int | None = None,
@@ -737,13 +882,24 @@ def main():
                          "sweep vs resident graph size")
     ap.add_argument("--overload", action="store_true",
                     help="run ONLY the open-loop Poisson overload ramp "
-                         "(fifo vs occupancy vs deadline SLO attainment)")
+                         "(fifo vs occupancy vs deadline vs deadline+"
+                         "service-time-admission SLO attainment) followed "
+                         "by the pipelined-vs-serial serve-loop A/B")
     ap.add_argument("--rates", type=str, default="100,200,400,800",
                     help="comma-separated arrival rates (req/s) for "
                          "--overload")
     ap.add_argument("--window", type=float, default=2.0,
                     help="seconds of offered traffic per rate step for "
                          "--overload")
+    ap.add_argument("--pipeline-depths", type=str, default="0,2,4",
+                    help="comma-separated pipeline depths for the "
+                         "pipelined-vs-serial A/B run by --overload "
+                         "(0 = serial loop)")
+    ap.add_argument("--pipeline-rate", type=float, default=1200.0,
+                    help="fixed offered load (req/s) for the pipeline A/B; "
+                         "pick a rate that saturates the serial loop")
+    ap.add_argument("--pipeline-window", type=float, default=2.0,
+                    help="seconds of offered traffic for the pipeline A/B")
     ap.add_argument("--sizes", type=str, default="10000,100000,1000000",
                     help="comma-separated host graph sizes for "
                          "--node-queries")
@@ -754,11 +910,19 @@ def main():
             args.requests is not None and args.requests < 1):
         ap.error("--requests, --working-set and --slots must be >= 1")
     if args.overload:
-        if args.window <= 0:
-            ap.error("--window must be positive")
+        if args.window <= 0 or args.pipeline_window <= 0:
+            ap.error("--window and --pipeline-window must be positive")
+        if args.pipeline_rate <= 0:
+            ap.error("--pipeline-rate must be positive")
         rates = tuple(int(r) for r in args.rates.split(","))
+        depths = tuple(int(d) for d in args.pipeline_depths.split(","))
+        if any(d < 0 for d in depths):
+            ap.error("--pipeline-depths entries must be >= 0")
         run_overload(rates=rates, window_s=args.window, slots=args.slots,
                      backend=args.backend, max_waiting=args.max_waiting)
+        run_pipeline_ab(depths=depths, rate=args.pipeline_rate,
+                        window_s=args.pipeline_window, slots=args.slots,
+                        backend=args.backend, max_waiting=args.max_waiting)
         return
     if args.device_scaling or args.router or args.node_queries:
         requests = args.requests or (16 if not args.full else 128)

@@ -33,10 +33,14 @@ thread instead of the caller-driven tick loop — clients just
 ``try_submit`` from any thread and ``stop(drain=True)`` at the end.  The
 catalog is registered with per-model SLOs (``slo_ms``), so the report
 gains the deadline-attainment line; pair with ``--scheduler deadline``
-to see EDF preemption protect tight-SLO models under load:
+to see EDF preemption protect tight-SLO models under load.
+``--pipeline-depth N`` sets the serve-loop pipelining: 0 runs the serial
+stack-then-execute loop, N >= 1 overlaps host batch stacking with device
+execution across N executor workers (bit-exact with serial; the report
+then shows device-busy vs stack-busy overlap fractions):
 
   PYTHONPATH=src python examples/serve_gnn.py --async-loop \
-      --scheduler deadline --requests 60
+      --scheduler deadline --requests 60 --pipeline-depth 2
 
 Multi-seed node queries: ``--seeds-per-query K`` batches K seed
 vertices into one request in ``--node-queries`` mode; the engine
@@ -79,7 +83,8 @@ def run_node_queries(args):
     engine = GnnServeEngine(
         cfg=GhostConfig(), slots=args.slots, backend=args.backend,
         scheduler=args.scheduler, max_waiting=args.max_waiting,
-        admission_policy=args.admission_policy)
+        admission_policy=args.admission_policy,
+        pipeline_depth=args.pipeline_depth)
     engine.register("sage_host", sage, sage.init(jax.random.PRNGKey(0)),
                     task="node", spec=GnnModelSpec.graphsage(f, 16, 4),
                     slo_ms=100.0 if args.async_loop else None)
@@ -137,6 +142,11 @@ def main():
                          "(start/try_submit/stop) instead of caller-driven "
                          "ticks; registers per-model SLOs so the report "
                          "shows deadline attainment")
+    ap.add_argument("--pipeline-depth", type=int, default=2,
+                    help="serve-loop pipelining under --async-loop: 0 = "
+                         "serial stack-then-execute, N >= 1 overlaps host "
+                         "stacking with N device-executor workers "
+                         "(bit-exact with serial)")
     ap.add_argument("--seeds-per-query", type=int, default=1,
                     help="seed vertices per request in --node-queries mode "
                          "(one shared sampled subgraph, one result row per "
@@ -166,6 +176,8 @@ def main():
         ap.error("--host-nodes must be >= 100")
     if args.seeds_per_query < 1:
         ap.error("--seeds-per-query must be >= 1")
+    if args.pipeline_depth < 0:
+        ap.error("--pipeline-depth must be >= 0")
     if args.node_queries:
         run_node_queries(args)
         return
@@ -192,7 +204,8 @@ def main():
     engine = GnnServeEngine(
         cfg=cfg, slots=args.slots, backend=args.backend,
         scheduler=args.scheduler, max_waiting=args.max_waiting,
-        admission_policy=args.admission_policy, mesh=mesh)
+        admission_policy=args.admission_policy, mesh=mesh,
+        pipeline_depth=args.pipeline_depth)
     # Under --async-loop the catalog carries SLO contracts: the graph
     # classifier is latency-tolerant, the node taggers are interactive.
     slo = {"gin": 250.0, "gcn": 50.0, "sage": 100.0} if args.async_loop \

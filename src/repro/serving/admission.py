@@ -33,6 +33,18 @@ for it; the authoritative decision is still the later ``decide`` call
 
 ``AdmissionStats`` (admitted / rejected / shed) is folded into the serve
 report so reject and shed rates are first-class serving metrics.
+
+Service-time admission (``unmeetable``): the engine may also reject a
+request *below* the queue bound when its SLO deadline cannot be met even
+under immediate scheduling — the learned expected service time of its
+(model, bucket) group, times the batches already queued ahead of it,
+overruns the deadline.  Serving such a request wastes device time on a
+guaranteed miss and steals it from meetable work; rejecting at enqueue is
+the cheapest point to say no.  Those rejections are counted both in
+``rejected`` (they are refusals the client sees) and separately in
+``unmeetable`` so overload reports can distinguish "queue full" from
+"deadline infeasible".  The controller only *counts* them — the estimate
+and the decision live in the engine, which owns the service-time model.
 """
 
 from __future__ import annotations
@@ -48,6 +60,10 @@ class AdmissionStats:
     admitted: int = 0
     rejected: int = 0
     shed: int = 0
+    # Subset of ``rejected``: refused because the SLO deadline was
+    # infeasible per the engine's service-time model, not because the
+    # queue was full.
+    unmeetable: int = 0
 
     @property
     def offered(self) -> int:
@@ -89,6 +105,13 @@ class AdmissionController:
             self.stats.rejected += 1
             return True
         return False
+
+    def reject_unmeetable(self) -> None:
+        """Count one SLO-infeasible rejection (engine-decided: expected
+        service time says the deadline cannot be met even if scheduled
+        immediately).  Same critical section as ``decide`` would be."""
+        self.stats.rejected += 1
+        self.stats.unmeetable += 1
 
     def decide(self, queued: int) -> str:
         """'admit' | 'reject' | 'shed' for one offered request.

@@ -36,22 +36,71 @@ Two driving modes share every scheduling/execution code path:
   tick-driven (the original mode, still what tests and closed-loop
       benchmarks use): the caller invokes ``step()``/``drain()``/``run()``
       and nothing happens between calls.
-  always-on (``start()``): a background serve thread forms and executes
+  always-on (``start()``): background serve threads form and execute
       batches continuously while any number of client threads call
       ``submit``/``try_submit``/``submit_nodes`` concurrently; results are
       picked up with the blocking ``result(rid)`` (or non-blocking
-      ``take_result``), and ``stop(drain=True)`` joins the loop and
-      serves out the remaining queue.  ``step`` and ``run`` refuse to run
-      while the loop owns batch formation.
+      ``take_result``), and ``stop(drain=True)`` closes intake, joins the
+      loop, and serves out the remaining queue.  ``step`` and ``run``
+      refuse to run while the loop owns batch formation.
 
-Concurrency model: one ``threading.Condition`` guards all queue/result/
-metric state.  Batch *extraction* and result *writeback* happen under the
-lock; the expensive parts — preprocessing (the cache carries its own
-internal lock) and executor calls — happen outside it, so submitters are
-never blocked behind a device call.  Admission decisions are taken inside
-the same critical section as the queue mutation they authorize, so the
-waiting bound cannot overshoot under concurrent submitters.  The engine
-lock and the cache lock are never held simultaneously.
+Always-on pipeline (``pipeline_depth``): the loop is a two-stage
+pipeline, the serving-side analogue of GHOST's vertex/edge stage overlap
+(paper Section 4.4).  A *stacker* thread extracts the scheduler-chosen
+batch and stacks its bucket-padded tiles into device-shaped numpy arrays;
+``pipeline_depth`` *executor* threads (default 2) pull stacked batches
+from a bounded handoff queue (``maxsize=pipeline_depth``), run the device
+call, and write results back — so host stacking of batch k+1 overlaps
+device execution of batch k instead of serializing behind it, and (with
+two workers) host readout/record-building of batch k-1 overlaps both.
+``pipeline_depth=0`` degenerates to the PR-9 single-thread serial loop
+(one thread does extract → stack → execute → writeback in order).
+
+Concurrency model and locking invariants (two-stage pipeline):
+
+  * One *engine lock* guards all queue/result/metric state: the waiting
+    groups, ``results``/``records``, admission + shed bookkeeping, the
+    service-time EWMAs, and the writeback tickets.  Two condition
+    wait-sets share it: ``_cond`` (submit/publish/drain state changes)
+    and ``_write_cond`` (notified only when a batch publishes, so
+    ticket-waiting workers are not woken by every submit in a storm).
+    Batch *extraction* (stacker) and result *writeback* (executor
+    workers) run under the lock; the expensive parts — preprocessing,
+    host stacking, device calls, readout — run outside it, so
+    submitters are never blocked behind a device call.
+  * The preprocessing cache carries its own internal lock; the engine
+    lock and the cache lock are **never held simultaneously** (cache
+    calls happen strictly outside the engine lock, on the submit path
+    and in the unlocked part of writeback's hardware costing).
+  * Admission decisions are taken inside the same critical section as
+    the queue mutation they authorize, so the waiting bound cannot
+    overshoot under concurrent submitters — and the service-time
+    admission estimate reads queue depth in that same section.
+  * The stacker → executor handoff is a bounded ``queue.Queue`` with its
+    own internal lock, never held together with the engine lock (puts
+    and gets happen outside it).
+  * Device execution serializes behind a dedicated *device lock*: one
+    device runs one program at a time, and concurrent XLA CPU executions
+    additionally thrash the shared intra-op thread pool (measurably
+    slower than serial).  Workers therefore overlap only *host* work —
+    readout, record building, ordered writeback — around the serialized
+    device stage.  The device lock is held with no other lock.
+  * Group-ordered writeback: extraction stamps each batch with a
+    monotone per-``(model_id, bucket)`` *ticket* (under the engine
+    lock); an executor worker publishes its batch only when the group's
+    writeback counter reaches its ticket, waiting on the engine
+    condition otherwise.  Two workers may therefore *execute* batches of
+    the same group concurrently, but they *publish* in extraction order,
+    so ``records`` ordering — and everything derived from it — matches
+    the serial loop exactly.  Result *values* need no ordering at all:
+    outputs are batch-composition-independent (see the numerics note
+    below), which is why overlapping execution stays bit-exact.
+  * Intake close: ``stop()`` atomically sets the intake-closed flag with
+    the loop-stop flag under the engine lock *before* joining threads
+    and draining, so a ``try_submit`` racing ``stop(drain=True)`` either
+    enqueued in time (and is served by the final drain) or fails fast
+    with ``RuntimeError`` — it can never strand a request behind a dead
+    serve thread.  ``start()`` reopens intake.
 
 Executor numerics: zero padding tiles, rows, and feature columns are exact
 no-ops (see serving/bucketing.py; executors slice features back to the
@@ -64,6 +113,21 @@ jitted run by 1 ULP in GAT's softmax — XLA fuses the exp/divide chain
 differently — so the jitted unbatched forward is the reference; batching
 and bucket padding themselves add no drift.)
 
+Service-time model: writeback feeds an EWMA of observed batch service
+time (host stacking + device execution) per ``(model_id, bucket)``,
+skipping each key's first execution so jit compilation never pollutes the
+steady-state estimate.  The model drives three consumers: (a)
+*service-time admission* — a request whose SLO cannot be met even if its
+group were scheduled immediately (non-preemptible in-flight batches plus
+queue-ahead batches times expected service time already overrun the
+deadline) is rejected at enqueue instead
+of being served late or shed later; (b) the deadline scheduler's urgency
+margin (a group whose head slack is inside one expected service time is
+urgent); (c) ``EngineRouter`` routes to the replica with the smallest
+estimated backlog *time* (queued batches x expected service) instead of
+the shortest raw queue.  The EWMAs survive ``reset_metrics`` (they are a
+learned model, not a metric) and surface in ``ServeReport``.
+
 Latency accounting uses ``time.perf_counter()`` (monotonic) throughout —
 ``time.time()`` can step backwards under clock adjustment and produce
 negative latencies.  SLO deadlines are absolute perf_counter instants
@@ -74,6 +138,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import queue as queue_mod
 import threading
 import time
 from collections import OrderedDict, deque
@@ -114,6 +179,35 @@ def gcn_prepare(graph: Graph):
 
 class QueueFullError(RuntimeError):
     """``submit`` on a full bounded queue under the 'reject' policy."""
+
+
+# EWMA smoothing for the per-(model, bucket) service-time model: heavy
+# enough to track load shifts within a few batches, light enough that one
+# outlier batch does not swing admission decisions.
+SERVICE_EWMA_ALPHA = 0.25
+
+
+@dataclasses.dataclass
+class _StackedBatch:
+    """One extracted batch after host stacking, ready for an executor.
+
+    The handoff unit of the two-stage pipeline: produced by the stacker
+    (or inline by the serial path), consumed by an executor worker.
+    ``ticket`` orders writeback within the batch's (model_id, bucket)
+    group; ``stack_s`` is the host stacking time that feeds the
+    service-time EWMA and the pipeline busy gauges.
+    """
+
+    key: tuple
+    batch: list
+    serve_tick: int
+    t_extract: float
+    ticket: int
+    blocks: np.ndarray  # [R, Bp, V, N]
+    rows: np.ndarray    # [R, Bp]
+    cols: np.ndarray    # [R, Bp]
+    feats: np.ndarray   # [R, padded_src, f]
+    stack_s: float
 
 
 @dataclasses.dataclass
@@ -167,6 +261,19 @@ class GnnServeEngine:
         "shed-oldest" (drop the waiting request with the least salvageable
         slack — submission order when no model carries an SLO — to make
         room).
+      pipeline_depth: executor workers behind the always-on loop's
+        stacker stage (and the bound on stacked batches in flight between
+        the stages).  Default 2: host stacking of batch k+1 overlaps
+        device execution of batch k.  0 = the serial single-thread loop
+        (stack and execute never overlap).  Tick-driven ``step``/``run``
+        are unaffected — they always serve synchronously.
+      service_time_admission: when True (default), a request carrying an
+        SLO whose deadline cannot be met even if its group were scheduled
+        immediately — per the learned expected-service-time EWMA, the
+        non-preemptible in-flight batches, and the queue ahead of it —
+        is rejected at enqueue (counted in
+        ``AdmissionStats.unmeetable``).  Requests are always admitted
+        while the (model, bucket) service time is still unknown.
       cache_capacity: LRU capacity of the preprocessing cache.
       tuner: optional ``kernels.autotune.Autotuner`` (duck-typed: needs
         ``resolve(site)`` + ``live_configs()``); the executor pool resolves
@@ -196,6 +303,8 @@ class GnnServeEngine:
         scheduler="fifo",
         max_waiting: Optional[int] = None,
         admission_policy: str = "reject",
+        pipeline_depth: int = 2,
+        service_time_admission: bool = True,
         cache_capacity: int = 256,
         tuner=None,
         kernel_config=None,
@@ -206,6 +315,11 @@ class GnnServeEngine:
         self.flags = flags.validate()
         self.slots = slots
         self.backend = backend
+        if pipeline_depth < 0:
+            raise ValueError(
+                f"pipeline_depth must be >= 0, got {pipeline_depth}")
+        self.pipeline_depth = int(pipeline_depth)
+        self.service_time_admission = bool(service_time_admission)
         self.registry = ModelRegistry()
         self.hosts = HostGraphCatalog()
         self.pool = ExecutorPool(slots=slots, backend=backend,  # validates
@@ -226,12 +340,42 @@ class GnnServeEngine:
         self._inflight = 0
         self._max_dropped_wait_ticks = 0
         self._max_dropped_wait_s = 0.0
-        # One condition guards all mutable engine state above; see the
-        # module docstring for what runs inside vs outside it.
-        self._cond = threading.Condition()
+        # One lock guards all mutable engine state above, with two wait
+        # sets on it: ``_cond`` for queue/result state changes (submit,
+        # publish, drain) and ``_write_cond`` notified only when a batch
+        # publishes — ticket-waiting executor workers park on the latter
+        # so a submit storm does not wake them 1000x/s for nothing.  See
+        # the module docstring for what runs inside vs outside the lock.
+        self._lock = threading.Lock()
+        self._cond = threading.Condition(self._lock)
+        self._write_cond = threading.Condition(self._lock)
         self._thread: Optional[threading.Thread] = None
+        self._workers: list[threading.Thread] = []
+        self._pipe: Optional["queue_mod.Queue[_StackedBatch]"] = None
+        self._stacker_done = True
         self._running = False
+        self._intake_closed = False
         self._loop_error: Optional[BaseException] = None
+        # Group-ordered writeback: extraction issues tickets, writeback
+        # publishes when the group's counter reaches its ticket.  Both
+        # dicts only ever grow together, so issued == published holds
+        # across start/stop cycles.
+        self._group_ticket: dict[tuple, int] = {}
+        self._group_write: dict[tuple, int] = {}
+        # Service-time model + pipeline busy gauges.  The EWMAs (and the
+        # warm set that keeps jit compilation out of them) survive
+        # reset_metrics: they are a learned model, not a metric.
+        self._service_ewma: dict[tuple, float] = {}
+        self._warm_keys: set[tuple] = set()
+        self._stack_busy_s = 0.0
+        self._exec_busy_s = 0.0
+        # One device runs one program at a time: executor workers serialize
+        # the jitted call + block_until_ready behind this lock (concurrent
+        # XLA CPU executions thrash the shared intra-op thread pool — worse
+        # than serial).  Workers overlap everything ELSE: host readout,
+        # record building and the ordered writeback of batch k proceed
+        # while batch k+1 occupies the device and the stacker forms k+2.
+        self._device_lock = threading.Lock()
 
     # ------------------------------------------------------------------
     # Catalog.
@@ -294,12 +438,27 @@ class GnnServeEngine:
         # not pay preprocessing first.  The authoritative decision is the
         # decide() inside _enqueue — atomic with the queue mutation.
         with self._cond:
+            self._check_intake_open_locked()
             if self.admission.try_reject_early(self._num_waiting):
                 return None
         t0 = time.perf_counter()
         return self._enqueue(model_id, graph, t0,
                              transform=entry_m.prepare_fn,
                              salt=entry_m.salt, slo_ms=entry_m.slo_ms)
+
+    def _check_intake_open_locked(self) -> None:
+        """Fail fast on submit-after-stop.  Caller holds the engine lock.
+
+        ``stop()`` closes intake atomically with the loop-stop flag, so a
+        submitter racing the shutdown either lands before the close (and
+        the final drain serves it) or sees this error — never a silently
+        stranded request.  ``start()`` reopens intake.
+        """
+        if self._intake_closed:
+            raise RuntimeError(
+                "engine is stopped: submit after stop() — intake is "
+                "closed (call start() to reopen, or drain()/step() serve "
+                "only what was already queued)")
 
     def _enqueue(self, model_id: str, graph: Graph, t0: float,
                  *, transform, salt: str, extra: bytes = b"",
@@ -333,6 +492,27 @@ class GnnServeEngine:
         feat = pad_features_to_bucket(pg, bucket, graph.node_feat)
         deadline = (t0 + slo_ms / 1e3 if slo_ms else math.inf)
         with self._cond:
+            self._check_intake_open_locked()
+            if slo_ms and self.service_time_admission:
+                # Service-time admission (ROADMAP 1b): reject now if the
+                # deadline is unmeetable even under *immediate* scheduling.
+                # Two terms no scheduler can reorder away: (a) work already
+                # extracted into the pipeline or onto the device — EDF
+                # preemption happens at batch *formation*, so in-flight
+                # batches are non-preemptible; (b) the request's own group
+                # queue, forcing ceil((q+1)/slots) batch services before
+                # its result lands.  No estimate yet (cold key) -> admit.
+                est = self._expected_service_locked((model_id, bucket))
+                if est is not None:
+                    ewma = self._service_ewma
+                    mean = sum(ewma.values()) / len(ewma) if ewma else est
+                    inflight_s = math.ceil(self._inflight / self.slots) * mean
+                    ahead = len(self._groups.get((model_id, bucket), ()))
+                    done = (time.perf_counter() + inflight_s
+                            + (ahead // self.slots + 1) * est)
+                    if done > deadline:
+                        self.admission.reject_unmeetable()
+                        return None
             verdict = self.admission.decide(self._num_waiting)
             if verdict == "reject":
                 return None
@@ -422,6 +602,7 @@ class GnnServeEngine:
                 f"model '{model_id}' expects {entry_m.f_in} features, host "
                 f"graph '{hentry.name}' carries {hg.num_features}")
         with self._cond:
+            self._check_intake_open_locked()
             if self.admission.try_reject_early(self._num_waiting):
                 return None
         t0 = time.perf_counter()
@@ -498,11 +679,28 @@ class GnnServeEngine:
     # Batch formation + execution (shared by both driving modes).
     # ------------------------------------------------------------------
 
+    def _expected_service_locked(self, key: tuple) -> Optional[float]:
+        """Expected batch service time (s) for one (model_id, bucket).
+
+        Caller holds the engine lock.  Exact key first; falls back to the
+        mean over the model's other warm buckets (a new bucket of a known
+        model behaves like its siblings far more than like nothing); None
+        when the model has no warm bucket at all.
+        """
+        v = self._service_ewma.get(key)
+        if v is not None:
+            return v
+        sibs = [s for k, s in self._service_ewma.items() if k[0] == key[0]]
+        if sibs:
+            return sum(sibs) / len(sibs)
+        return None
+
     def _extract_locked(self):
         """Pop the scheduler-chosen batch.  Caller holds the lock.
 
-        Returns ``(key, batch, serve_tick, t_extract)`` or None when the
-        queue is empty.
+        Returns ``(key, batch, serve_tick, t_extract, ticket)`` or None
+        when the queue is empty.  The ticket orders this batch's
+        writeback within its group (see the module docstring).
         """
         if not self._groups:
             return None
@@ -512,7 +710,9 @@ class GnnServeEngine:
                        head_wait_ticks=self._tick - dq[0].submit_tick,
                        head_age_s=now - dq[0].t_submit,
                        head_deadline_s=dq[0].deadline_s,
-                       head_slack_s=dq[0].deadline_s - now)
+                       head_slack_s=dq[0].deadline_s - now,
+                       head_est_service_s=(
+                           self._expected_service_locked(key) or 0.0))
             for key, dq in self._groups.items()
         ]
         key = self.scheduler.select(states, self.slots)
@@ -526,12 +726,20 @@ class GnnServeEngine:
         self._inflight += len(batch)
         serve_tick = self._tick
         self._tick += 1
-        return key, batch, serve_tick, now
+        ticket = self._group_ticket.get(key, 0)
+        self._group_ticket[key] = ticket + 1
+        return key, batch, serve_tick, now, ticket
 
-    def _execute(self, key, batch, serve_tick: int, t_extract: float) -> int:
-        """Run one extracted batch and write results back under the lock."""
-        model_id, bucket = key
-        entry = self.registry[model_id]
+    def _stack(self, key, batch, serve_tick: int, t_extract: float,
+               ticket: int) -> _StackedBatch:
+        """Host stage: stack one extracted batch into device-shaped arrays.
+
+        Runs outside every lock (stacker thread, or inline on the serial
+        path) — this is the work the pipeline overlaps with device
+        execution.
+        """
+        _, bucket = key
+        t0 = time.perf_counter()
         r = self.slots
         bp, v, n = bucket.num_blocks, bucket.v, bucket.n
         blocks = np.zeros((r, bp, v, n), np.float32)
@@ -541,12 +749,31 @@ class GnnServeEngine:
         for i, p in enumerate(batch):
             blocks[i], rows[i], cols[i] = p.blocks, p.block_row, p.block_col
             feats[i] = p.feat
+        return _StackedBatch(
+            key=key, batch=batch, serve_tick=serve_tick,
+            t_extract=t_extract, ticket=ticket,
+            blocks=blocks, rows=rows, cols=cols, feats=feats,
+            stack_s=time.perf_counter() - t0)
 
-        exe = self.pool.executor(entry, bucket)
-        out = exe(entry.params, jnp.asarray(blocks), jnp.asarray(rows),
-                  jnp.asarray(cols), jnp.asarray(feats))
-        out = np.asarray(jax.block_until_ready(out))
-        t_done = time.perf_counter()
+    def _run_stacked(self, sb: _StackedBatch) -> int:
+        """Device stage: execute one stacked batch, then publish in group
+        ticket order under the engine lock."""
+        model_id, bucket = sb.key
+        key = sb.key
+        batch = sb.batch
+        entry = self.registry[model_id]
+        was_warm = key in self._warm_keys
+        with self._device_lock:
+            # exec_s is measured inside the lock: pure device occupancy,
+            # not time spent queued behind a peer's execution.
+            t_exec0 = time.perf_counter()
+            exe = self.pool.executor(entry, bucket)
+            out = exe(entry.params, jnp.asarray(sb.blocks),
+                      jnp.asarray(sb.rows), jnp.asarray(sb.cols),
+                      jnp.asarray(sb.feats))
+            out = np.asarray(jax.block_until_ready(out))
+            t_done = time.perf_counter()
+            exec_s = t_done - t_exec0
 
         results: dict[int, np.ndarray] = {}
         records: list[RequestRecord] = []
@@ -571,8 +798,8 @@ class GnnServeEngine:
                 cache_hit=p.cache_hit,
                 latency_s=latency,
                 batch_size=len(batch),
-                wait_ticks=serve_tick - p.submit_tick,
-                wait_s=t_extract - p.t_submit,
+                wait_ticks=sb.serve_tick - p.submit_tick,
+                wait_s=sb.t_extract - p.t_submit,
                 hw_latency_s=hw_lat,
                 hw_energy_j=hw_e,
                 slo_ms=p.slo_ms,
@@ -586,11 +813,42 @@ class GnnServeEngine:
                 fanouts=p.fanouts_desc,
             ))
         with self._cond:
+            # Publish in extraction order within the group: concurrent
+            # workers may *execute* same-group batches out of order (the
+            # values cannot differ — outputs are batch-composition-
+            # independent), but records/results land serially.  The wait
+            # parks on the publish-only condition so submit-storm
+            # notifications never wake a ticket-waiting worker.
+            while self._group_write.get(key, 0) != sb.ticket:
+                if self._loop_error is not None:
+                    return 0  # a peer crashed; the engine is failed anyway
+                self._write_cond.wait(timeout=0.05)
+            self._group_write[key] = sb.ticket + 1
             self.results.update(results)
             self.records.extend(records)
             self._inflight -= len(batch)
+            self._stack_busy_s += sb.stack_s
+            self._exec_busy_s += exec_s
+            if was_warm:
+                # First execution of a key includes jit compilation; keep
+                # it out of the steady-state service-time model.
+                service = sb.stack_s + exec_s
+                prev = self._service_ewma.get(key)
+                self._service_ewma[key] = (
+                    service if prev is None else
+                    SERVICE_EWMA_ALPHA * service
+                    + (1.0 - SERVICE_EWMA_ALPHA) * prev)
+            else:
+                self._warm_keys.add(key)
             self._cond.notify_all()
+            self._write_cond.notify_all()
         return len(batch)
+
+    def _execute(self, key, batch, serve_tick: int, t_extract: float,
+                 ticket: int) -> int:
+        """Serial path: stack then execute one batch, back to back."""
+        return self._run_stacked(
+            self._stack(key, batch, serve_tick, t_extract, ticket))
 
     def step(self) -> int:
         """Serve one batch from the scheduler-chosen (model, bucket) group.
@@ -610,7 +868,22 @@ class GnnServeEngine:
             return 0
         return self._execute(*extracted)
 
+    def _fail_loop(self, e: BaseException) -> None:
+        """Record the first crash of any serve thread and stop the loop.
+
+        Every waiter (``result``/``drain``/``stop``) re-raises it as
+        ``RuntimeError("serve loop failed")``.
+        """
+        with self._cond:
+            if self._loop_error is None:
+                self._loop_error = e
+            self._running = False
+            self._cond.notify_all()
+            self._write_cond.notify_all()
+
     def _serve_loop(self) -> None:
+        """pipeline_depth=0: the serial loop — one thread does extract →
+        stack → execute → writeback in order (no stage overlap)."""
         try:
             while True:
                 with self._cond:
@@ -622,44 +895,129 @@ class GnnServeEngine:
                 if extracted is not None:
                     self._execute(*extracted)
         except BaseException as e:  # noqa: BLE001 — surfaced to clients
+            self._fail_loop(e)
+
+    def _pipe_put(self, sb: _StackedBatch) -> bool:
+        """Bounded handoff put that stays responsive to a peer crash.
+
+        Returns False (abandoning the batch) only when the engine already
+        failed — the loop error reaches every waiter first.
+        """
+        while True:
+            try:
+                self._pipe.put(sb, timeout=0.05)
+                return True
+            except queue_mod.Full:
+                with self._cond:
+                    if self._loop_error is not None:
+                        return False
+
+    def _stacker_loop(self) -> None:
+        """Pipeline stage 1: extract the scheduler-chosen batch and stack
+        it on the host, then hand off to the executor workers."""
+        try:
+            while True:
+                with self._cond:
+                    while self._running and not self._groups:
+                        self._cond.wait(timeout=0.05)
+                    if not self._running:
+                        return
+                    extracted = self._extract_locked()
+                if extracted is None:
+                    continue
+                if not self._pipe_put(self._stack(*extracted)):
+                    return
+        except BaseException as e:  # noqa: BLE001 — surfaced to clients
+            self._fail_loop(e)
+        finally:
+            # Executor workers drain what's queued, then exit on this flag.
             with self._cond:
-                self._loop_error = e
-                self._running = False
+                self._stacker_done = True
                 self._cond.notify_all()
+
+    def _executor_loop(self) -> None:
+        """Pipeline stage 2: execute stacked batches and publish results
+        in group ticket order.  ``pipeline_depth`` of these run at once."""
+        try:
+            while True:
+                try:
+                    sb = self._pipe.get(timeout=0.05)
+                except queue_mod.Empty:
+                    with self._cond:
+                        if self._loop_error is not None:
+                            return
+                        # _stacker_done is set after the stacker's last
+                        # put, so done + empty means no batch can arrive.
+                        if self._stacker_done and self._pipe.empty():
+                            return
+                    continue
+                self._run_stacked(sb)
+        except BaseException as e:  # noqa: BLE001 — surfaced to clients
+            self._fail_loop(e)
 
     # ------------------------------------------------------------------
     # Always-on loop lifecycle.
     # ------------------------------------------------------------------
 
     def start(self) -> "GnnServeEngine":
-        """Start the background serve thread (idempotent calls raise).
+        """Start the background serve threads (idempotent calls raise).
 
         After start, any number of client threads may submit concurrently;
-        batches form and execute continuously.  Pair with ``stop()``.
+        batches form and execute continuously.  With ``pipeline_depth >=
+        1`` this spawns the stacker plus that many executor workers; with
+        0 a single serial serve thread.  Reopens intake after a prior
+        ``stop()``.  Pair with ``stop()``.
         """
         with self._cond:
-            if self._thread is not None:
+            if self._thread is not None or self._workers:
                 raise RuntimeError("serve loop already running")
             self._running = True
+            self._intake_closed = False
             self._loop_error = None
-            self._thread = threading.Thread(
-                target=self._serve_loop, name="gnn-serve-loop", daemon=True)
-            self._thread.start()
+            if self.pipeline_depth == 0:
+                self._stacker_done = True  # no pipeline stages
+                self._thread = threading.Thread(
+                    target=self._serve_loop, name="gnn-serve-loop",
+                    daemon=True)
+                threads = [self._thread]
+            else:
+                self._stacker_done = False
+                self._pipe = queue_mod.Queue(maxsize=self.pipeline_depth)
+                self._thread = threading.Thread(
+                    target=self._stacker_loop, name="gnn-serve-stack",
+                    daemon=True)
+                self._workers = [
+                    threading.Thread(target=self._executor_loop,
+                                     name=f"gnn-serve-exec-{i}", daemon=True)
+                    for i in range(self.pipeline_depth)]
+                threads = [self._thread, *self._workers]
+            for t in threads:
+                t.start()
         return self
 
     def stop(self, drain: bool = True) -> None:
-        """Join the serve loop; by default serve out the remaining queue.
+        """Close intake, join the serve threads; by default serve out the
+        remaining queue.
 
-        ``drain=False`` leaves unserved requests waiting (a later
-        ``drain()``/``step()``/``start()`` can still serve them).
-        Re-raises a serve-loop crash, if one happened.
+        Intake closes atomically with the loop-stop flag (same critical
+        section), *before* the final drain pass — a ``try_submit`` racing
+        this either enqueued in time (the drain below serves it) or fails
+        fast with RuntimeError; it can never strand a request behind a
+        dead serve thread.  ``drain=False`` leaves unserved requests
+        waiting (a later ``drain()``/``step()``/``start()`` can still
+        serve them — but new submissions need ``start()`` to reopen
+        intake).  Re-raises a serve-loop crash, if one happened.
         """
         with self._cond:
+            self._intake_closed = True
             self._running = False
             self._cond.notify_all()
             t, self._thread = self._thread, None
+            workers, self._workers = self._workers, []
         if t is not None:
             t.join()
+        for w in workers:
+            w.join()
         with self._cond:
             err = self._loop_error
         if err is not None:
@@ -819,6 +1177,45 @@ class GnnServeEngine:
             return (max(waiting_ticks, self._max_dropped_wait_ticks),
                     max(waiting_s, self._max_dropped_wait_s))
 
+    def service_time_ms(self) -> dict[str, float]:
+        """Learned expected batch service time (ms) per warm
+        ``"model_id/bucket"`` key — the EWMA that drives service-time
+        admission, deadline urgency, and router slack balancing."""
+        with self._cond:
+            return {f"{mid}/{bucket.describe()}": ewma * 1e3
+                    for (mid, bucket), ewma in self._service_ewma.items()}
+
+    def queue_pressure(self) -> tuple[float, int]:
+        """(estimated backlog seconds, raw waiting count) — one locked read.
+
+        Backlog = per-group queued batches x expected service time, plus
+        the in-flight tail; groups with no estimate use the engine-wide
+        mean (0 when nothing is warm yet, which degrades router slack
+        ordering to the raw-queue-length tie-break).  ``EngineRouter``
+        sorts replicas by exactly this tuple.
+        """
+        with self._cond:
+            ewma = self._service_ewma
+            mean = sum(ewma.values()) / len(ewma) if ewma else 0.0
+            backlog = 0.0
+            for key, dq in self._groups.items():
+                est = self._expected_service_locked(key)
+                backlog += (math.ceil(len(dq) / self.slots)
+                            * (mean if est is None else est))
+            if self._inflight:
+                backlog += math.ceil(self._inflight / self.slots) * mean
+            return backlog, self._num_waiting
+
+    def pipeline_stats(self) -> dict:
+        """Configured depth + cumulative per-stage busy seconds (a report
+        turns these into busy *fractions* of the measured wall clock;
+        exec is device occupancy — the device lock serializes execution —
+        so overlap shows as exec near 1.0 with stack-busy nonzero)."""
+        with self._cond:
+            return {"depth": self.pipeline_depth,
+                    "stack_busy_s": self._stack_busy_s,
+                    "exec_busy_s": self._exec_busy_s}
+
     def report(self, wall_s: float) -> ServeReport:
         wait_ticks, wait_s = self.queue_wait_gauges()
         with self._cond:
@@ -830,11 +1227,15 @@ class GnnServeEngine:
                             queue_max_wait_ticks=wait_ticks,
                             queue_max_wait_s=wait_s,
                             kernel_configs=self.pool.kernel_configs(),
-                            topology=self.pool.topology())
+                            topology=self.pool.topology(),
+                            service_time_ms=self.service_time_ms(),
+                            pipeline=self.pipeline_stats())
 
     def reset_metrics(self) -> None:
-        """Zero serving metrics while keeping compiled executors and cache
-        entries — so benchmarks can warm up and then measure steady state."""
+        """Zero serving metrics while keeping compiled executors, cache
+        entries, and the service-time EWMAs (a learned model, not a
+        metric) — so benchmarks can warm up and then measure steady
+        state."""
         with self._cond:
             self.results.clear()
             self.records.clear()
@@ -842,5 +1243,7 @@ class GnnServeEngine:
             self._shed_set.clear()
             self._max_dropped_wait_ticks = 0
             self._max_dropped_wait_s = 0.0
+            self._stack_busy_s = 0.0
+            self._exec_busy_s = 0.0
             self.cache.stats = CacheStats()
             self.admission.stats = AdmissionStats()

@@ -24,6 +24,7 @@ widths share the host-side batching machinery.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from collections import OrderedDict
 from typing import Callable, Iterator, Optional
 
@@ -263,6 +264,12 @@ class ExecutorPool:
         self.shard_axis = shard_axis
         self._executors: dict[tuple[str, Bucket], Callable] = {}
         self._trace_count = 0
+        # Pipelined serving runs several executor workers; the get-or-build
+        # below must not race (a lost race would double-compile and skew
+        # trace_count).  Build time under the lock is acceptable: it is
+        # paid once per (model, bucket) and concurrent callers of a cold
+        # key need the same trace anyway.
+        self._lock = threading.Lock()
 
     @property
     def num_shards(self) -> int:
@@ -300,10 +307,11 @@ class ExecutorPool:
 
     def executor(self, entry: ModelEntry, bucket: Bucket) -> Callable:
         key = (entry.model_id, bucket)
-        exe = self._executors.get(key)
-        if exe is None:
-            exe = self._executors[key] = self._build(entry, bucket)
-        return exe
+        with self._lock:
+            exe = self._executors.get(key)
+            if exe is None:
+                exe = self._executors[key] = self._build(entry, bucket)
+            return exe
 
     def _build(self, entry: ModelEntry, bucket: Bucket) -> Callable:
         model, task = entry.model, entry.task

@@ -147,6 +147,21 @@ class ServeReport:
                              # no node queries were served): queries, seeds,
                              # sample-time percentiles, subgraph sizes,
                              # fanout mix
+    unmeetable: int = 0      # subset of `rejected`: refused at enqueue
+                             # because the SLO deadline was infeasible per
+                             # the learned service-time model
+    service_time_ms: dict = dataclasses.field(default_factory=dict)
+                             # "model_id/bucket" -> expected batch service
+                             # time (ms), the EWMA driving admission /
+                             # urgency / router slack ({} = nothing warm)
+    pipeline: dict = dataclasses.field(default_factory=dict)
+                             # serve-loop pipeline overlap: depth plus
+                             # per-stage busy seconds and busy fractions
+                             # of wall clock (device execution serializes
+                             # behind the engine's device lock, so exec is
+                             # occupancy <= ~1.0; overlap shows up as
+                             # exec staying near 1.0 while stack-busy is
+                             # nonzero — host work hidden behind the device)
 
     def to_json(self) -> str:
         return json.dumps(dataclasses.asdict(self), indent=2, default=float)
@@ -162,6 +177,7 @@ class ServeReport:
             f"max queue wait {self.max_wait_s * 1e3:.1f}ms "
             f"({self.max_wait_ticks} ticks)\n"
             f"  admission: {self.admitted} admitted / {self.rejected} rejected"
+            f" ({self.unmeetable} SLO-unmeetable)"
             f" / {self.shed} shed (reject rate {self.reject_rate:.2f})\n"
             + (f"  SLO attainment: {self.slo_attainment['met']}/"
                f"{self.slo_attainment['served']} "
@@ -172,6 +188,14 @@ class ServeReport:
                    f"{v['slo_ms']:.0f}ms)"
                    for m, v in self.slo_attainment["per_model"].items())
                + "\n" if self.slo_attainment else "")
+            + (f"  expected service (EWMA): "
+               + ", ".join(f"{k}: {v:.2f}ms"
+                           for k, v in sorted(self.service_time_ms.items()))
+               + "\n" if self.service_time_ms else "")
+            + (f"  pipeline depth {self.pipeline['depth']}: "
+               f"device-busy {self.pipeline.get('exec_busy_frac', 0.0):.0%} / "
+               f"stack-busy {self.pipeline.get('stack_busy_frac', 0.0):.0%} "
+               f"of wall clock\n" if self.pipeline else "")
             + f"  per model: {self.per_model}\n"
             f"  preprocess cache: {self.cache_hits} hits / "
             f"{self.cache_misses} misses (hit rate {self.cache_hit_rate:.2f})\n"
@@ -213,7 +237,19 @@ def build_report(
     kernel_configs: Optional[dict] = None,
     topology: Optional[dict] = None,
     replicas: Optional[dict] = None,
+    service_time_ms: Optional[dict] = None,
+    pipeline: Optional[dict] = None,
 ) -> ServeReport:
+    if pipeline:
+        # Busy seconds -> fractions of the measured wall clock.  Device
+        # execution serializes behind the engine's device lock, so the
+        # exec fraction is device occupancy (~<= 1.0); pipelining shows
+        # up as exec near 1.0 with stacking/readout hidden behind it.
+        pipeline = dict(pipeline)
+        for stage in ("stack", "exec"):
+            busy = pipeline.get(f"{stage}_busy_s", 0.0)
+            pipeline[f"{stage}_busy_frac"] = (busy / wall_s
+                                              if wall_s > 0 else 0.0)
     lats = [r.latency_s for r in records]
     buckets: dict[str, int] = {}
     per_model: dict[str, int] = {}
@@ -275,4 +311,8 @@ def build_report(
         topology=topology or {},
         replicas=replicas or {},
         node_query_stats=node_query_stats,
+        unmeetable=(getattr(admission_stats, "unmeetable", 0)
+                    if admission_stats else 0),
+        service_time_ms=service_time_ms or {},
+        pipeline=pipeline or {},
     )

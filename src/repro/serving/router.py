@@ -11,10 +11,18 @@ between them.  ``EngineRouter`` owns that seam:
       one trace set instead of N.  Placement is decided at ``register``
       time and never migrates — a model's compiled executors live where
       its traffic lands.
-  routing (load-aware, admission-respecting)
-      each request goes to the eligible replica with the shortest waiting
-      queue; when that replica's admission controller rejects, the router
-      falls back through the remaining eligible replicas before giving up.
+  routing (slack-aware, admission-respecting)
+      each request goes to the eligible replica with the smallest
+      *estimated completion slack cost*: queued batches times the
+      replica's learned expected service time (``engine.queue_pressure``),
+      tie-broken by raw queue length.  Two replicas with equal queue
+      depths but different catalogs (one serving 2 ms batches, one 40 ms)
+      are not equally loaded — time-weighted backlog routes around the
+      slow one where raw queue length cannot.  Before any service time is
+      learned every backlog estimate is 0.0 and the tie-break reproduces
+      shortest-queue routing exactly.  When the chosen replica's
+      admission controller rejects, the router falls back through the
+      remaining eligible replicas (in the same order) before giving up.
       Every replica keeps its own admission bound — overload on one hot
       replica sheds there without disturbing the others.
   identity (global rids)
@@ -190,10 +198,12 @@ class EngineRouter:
         """Route one request; returns a global rid or None when every
         eligible replica's admission controller rejected it."""
         where = self.placement(model_id)
-        # Shortest-queue-first among eligible replicas; on rejection fall
-        # back to the next shortest (per-replica admission, router-level
-        # failover).  Sort is stable, so equal queues keep placement order.
-        order = sorted(where, key=lambda i: self.replicas[i].num_waiting)
+        # Least-estimated-backlog first among eligible replicas (queued
+        # batches x learned service time, raw queue length as tie-break —
+        # see queue_pressure); on rejection fall back to the next (per-
+        # replica admission, router-level failover).  Sort is stable, so
+        # fully tied replicas keep placement order.
+        order = sorted(where, key=lambda i: self.replicas[i].queue_pressure())
         for i in order:
             local = self.replicas[i].try_submit(model_id, graph)
             if local is not None:
@@ -219,8 +229,8 @@ class EngineRouter:
                          host: Optional[str] = None,
                          **kwargs) -> Optional[int]:
         """Route one node query to a replica holding both the model and the
-        host graph (shortest queue first, admission failover); returns a
-        global rid or None when every such replica rejected it."""
+        host graph (least estimated backlog first, admission failover);
+        returns a global rid or None when every such replica rejected it."""
         where_m = self.placement(model_id)
         if host is None:
             if len(self._host_placement) != 1:
@@ -234,7 +244,8 @@ class EngineRouter:
             raise ValueError(
                 f"no replica holds both model '{model_id}' ({where_m}) and "
                 f"host graph '{host}' ({sorted(where_h)})")
-        order = sorted(eligible, key=lambda i: self.replicas[i].num_waiting)
+        order = sorted(eligible,
+                       key=lambda i: self.replicas[i].queue_pressure())
         for i in order:
             local = self.replicas[i].try_submit_nodes(
                 model_id, seed_ids, host=host, **kwargs)
@@ -346,6 +357,7 @@ class EngineRouter:
             admission.admitted += e.admission.stats.admitted
             admission.rejected += e.admission.stats.rejected
             admission.shed += e.admission.stats.shed
+            admission.unmeetable += e.admission.stats.unmeetable
             t, s = e.queue_wait_gauges()
             wait_ticks, wait_s = max(wait_ticks, t), max(wait_s, s)
             served: dict[str, int] = {}
@@ -356,11 +368,14 @@ class EngineRouter:
                 "per_model": served,
                 "admitted": e.admission.stats.admitted,
                 "rejected": e.admission.stats.rejected,
+                "unmeetable": e.admission.stats.unmeetable,
                 "shed": e.admission.stats.shed,
                 "slo_attainment": slo_attainment_from(replica_records),
                 "traces_compiled": e.pool.trace_count,
                 "topology": e.pool.topology(),
                 "kernel_configs": e.pool.kernel_configs(),
+                "service_time_ms": e.service_time_ms(),
+                "pipeline": e.pipeline_stats(),
             }
         first = self.replicas[0]
         # The merged ServeReport computes union-stream SLO attainment from
@@ -377,7 +392,35 @@ class EngineRouter:
             kernel_configs=self._merged_kernel_configs(),
             topology=self._merged_topology(),
             replicas=per_replica,
+            service_time_ms=self._merged_service_times(),
+            pipeline=self._merged_pipeline(),
         )
+
+    def _merged_service_times(self) -> dict:
+        """Mean expected service time per key across replicas that know it.
+
+        The replicas run on one host here, so a cross-replica mean is a
+        fair summary; replica-exact EWMAs stay in
+        ``ServeReport.replicas[...]["service_time_ms"]``.
+        """
+        sums: dict[str, float] = {}
+        counts: dict[str, int] = {}
+        for e in self.replicas:
+            for key, ms in e.service_time_ms().items():
+                sums[key] = sums.get(key, 0.0) + ms
+                counts[key] = counts.get(key, 0) + 1
+        return {key: sums[key] / counts[key] for key in sums}
+
+    def _merged_pipeline(self) -> dict:
+        """Summed per-stage busy seconds over all replicas (the router's
+        replicas share one configured depth; per-replica splits stay in
+        ``ServeReport.replicas``)."""
+        stats = [e.pipeline_stats() for e in self.replicas]
+        return {
+            "depth": stats[0]["depth"],
+            "stack_busy_s": sum(s["stack_busy_s"] for s in stats),
+            "exec_busy_s": sum(s["exec_busy_s"] for s in stats),
+        }
 
     def _merged_kernel_configs(self) -> dict:
         """Union of every replica's live kernel configs.

@@ -62,6 +62,11 @@ class GroupState:
     # arrival order is submission order).  inf = no deadline.
     head_deadline_s: float = math.inf   # absolute perf_counter deadline
     head_slack_s: float = math.inf      # deadline minus now (< 0 = blown)
+    # Learned expected batch service time for this group (the engine's
+    # per-(model, bucket) EWMA); 0.0 while the key is cold.  Lets the
+    # deadline policy scale its urgency margin to how long this group's
+    # batches actually take instead of one engine-wide constant.
+    head_est_service_s: float = 0.0
 
 
 @runtime_checkable
@@ -140,7 +145,12 @@ class DeadlineScheduler:
 
     ``urgent_slack_s`` should cover roughly one batch service time plus
     result materialization — the point past which waiting one more
-    iteration turns a meetable deadline into a miss.
+    iteration turns a meetable deadline into a miss.  When the engine has
+    a learned service-time estimate for a group
+    (``GroupState.head_est_service_s``), the urgency margin is the *max*
+    of the static knob and that estimate: a group whose head slack is
+    inside one expected batch service is at risk by definition, however
+    the knob was tuned (cold groups fall back to the knob alone).
     """
 
     name = "deadline"
@@ -155,7 +165,7 @@ class DeadlineScheduler:
         self.max_age_s = max_age_s
 
     def _urgent(self, g: GroupState) -> bool:
-        if g.head_slack_s <= self.urgent_slack_s:
+        if g.head_slack_s <= max(self.urgent_slack_s, g.head_est_service_s):
             return True
         return self.max_age_s is not None and g.head_age_s >= self.max_age_s
 

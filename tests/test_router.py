@@ -91,6 +91,42 @@ def test_routes_to_shortest_queue():
     assert [e.num_waiting for e in router.replicas] == [1, 1]
 
 
+def test_routes_by_estimated_slack_not_raw_queue_length():
+    """Two replicas with equal-length queues are NOT equally loaded when
+    their learned service times differ: routing must prefer the smaller
+    time backlog (queued batches x expected service), falling back to raw
+    queue length only on ties (the cold-start behavior above)."""
+    model, params = make_model()
+    router = EngineRouter(2, slots=4)
+    router.register("m", model, params, hot=True)
+    g = make_graph(3)
+    router.submit("m", g)   # cold: ties -> replica 0
+    router.submit("m", g)   # cold: queue tie-break -> replica 1
+    r0, r1 = router.replicas
+    assert [r0.num_waiting, r1.num_waiting] == [1, 1]
+    # Inject asymmetric learned service times for the one waiting group
+    # (the EWMA the engines would learn from serving: replica 0 fast,
+    # replica 1 slow — e.g. different device health or catalog pressure).
+    (key,) = r0._groups
+    r0._service_ewma[key] = 0.001   # 1 ms batches
+    r1._service_ewma[key] = 0.100   # 100 ms batches
+    # Every new request now lands on replica 0 — its queue grows LONGER
+    # than replica 1's, yet its estimated backlog time stays smaller.
+    for _ in range(3):
+        router.submit("m", g)
+    assert r0.num_waiting == 4      # 1 batch x 1 ms  << 1 batch x 100 ms
+    assert r1.num_waiting == 1
+    backlog0, _ = r0.queue_pressure()
+    backlog1, _ = r1.queue_pressure()
+    assert backlog0 < backlog1
+    assert router.drain() == 5
+    # The merged report surfaces the per-replica models it routed by.
+    rep = router.report(1.0)
+    assert rep.service_time_ms      # cross-replica mean per key
+    assert rep.replicas["replica0"]["service_time_ms"]
+    assert rep.replicas["replica1"]["service_time_ms"]
+
+
 def test_admission_fallback_across_replicas():
     model, params = make_model()
     router = EngineRouter(2, slots=2, max_waiting=1,
